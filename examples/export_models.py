@@ -1,0 +1,26 @@
+"""Export the full machine-readable instruction models (uops.info §6.4):
+characterize every supported instruction variant on each simulated
+microarchitecture and write XML + JSON under experiments/models/.
+
+Run: PYTHONPATH=src python examples/export_models.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import model_io
+from repro.core.characterize import characterize
+from repro.core.isa import TEST_ISA
+from repro.core.simulator import SimMachine
+from repro.core.uarch import SIM_UARCHES
+
+out = Path(__file__).resolve().parents[1] / "experiments" / "models"
+out.mkdir(parents=True, exist_ok=True)
+for name, ua in SIM_UARCHES.items():
+    machine = SimMachine(ua, TEST_ISA)
+    model = characterize(machine, TEST_ISA)
+    (out / f"{name}.xml").write_text(model_io.to_xml(model, TEST_ISA))
+    (out / f"{name}.json").write_text(model_io.to_json(model))
+    print(f"{name}: {len(model.instructions)} instruction variants -> "
+          f"{out / name}.xml (+.json) in {model.run_seconds:.1f}s")

@@ -1,0 +1,26 @@
+"""Roofline report from the dry-run artifacts: the three terms per cell,
+dominant bottleneck, and the §Perf score (ideal/bound fraction).
+
+Run after a dry-run sweep:
+  PYTHONPATH=src python -m repro.launch.dryrun --all --variant cost
+  PYTHONPATH=src python examples/roofline_report.py [tag]
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.analysis.roofline import full_table, markdown_table
+
+tag = sys.argv[1] if len(sys.argv) > 1 else ""
+rows = full_table(variant="cost", tag=tag)
+if not rows:
+    print("no cost-variant dry-run records found under experiments/dryrun")
+    sys.exit(1)
+print(markdown_table(rows))
+worst = min(rows, key=lambda r: r["roofline_fraction"])
+coll = max(rows, key=lambda r: r["collective_s"])
+print(f"\nworst roofline fraction: {worst['arch']}/{worst['shape']} "
+      f"({worst['roofline_fraction']:.3f})")
+print(f"most collective-bound:   {coll['arch']}/{coll['shape']} "
+      f"({coll['collective_s']:.2f}s wire)")

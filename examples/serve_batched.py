@@ -1,0 +1,80 @@
+"""End-to-end serving driver: batched prefill + autoregressive decode on a
+~100M-parameter SmolLM-family model, with wall-clock throughput and the
+perf-model's memory-roofline sanity check.
+
+Run: PYTHONPATH=src python examples/serve_batched.py [--big]
+  (default: reduced dims for a fast CPU demo; --big uses ~100M params)
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import load_config
+from repro.models import model as MF
+from repro.train.serve import make_serve_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--big", action="store_true", help="~100M params")
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--prefill", type=int, default=128)
+ap.add_argument("--decode", type=int, default=64)
+args = ap.parse_args()
+
+cfg = load_config("smollm_360m")
+if args.big:  # ~100M-param variant of the family
+    cfg = cfg.replace(num_layers=12, d_model=768, num_heads=12,
+                      num_kv_heads=4, head_dim=64, d_ff=2048,
+                      vocab_size=32000)
+else:
+    cfg = cfg.replace(num_layers=6, d_model=256, num_heads=8, num_kv_heads=4,
+                      head_dim=32, d_ff=768, vocab_size=8192)
+model = MF.build_model(cfg)
+n_params = cfg.param_count()
+print(f"model: {cfg.name}-variant, {n_params / 1e6:.1f}M params, "
+      f"batch={args.batch}")
+
+params = model.init(jax.random.PRNGKey(0))
+toks = jax.random.randint(jax.random.PRNGKey(1),
+                          (args.batch, args.prefill), 0, cfg.vocab_size)
+
+prefill = jax.jit(lambda p, b: model.prefill(
+    p, b, pad_to=args.prefill + args.decode))
+serve_step = jax.jit(make_serve_step(model), donate_argnums=(1,))
+
+t0 = time.perf_counter()
+logits, state = jax.block_until_ready(prefill(params, {"tokens": toks}))
+t_prefill = time.perf_counter() - t0
+print(f"prefill: {args.batch}x{args.prefill} tokens in {t_prefill:.2f}s "
+      f"({args.batch * args.prefill / t_prefill:.0f} tok/s)")
+
+tok = jnp.argmax(logits, -1).astype(jnp.int32)
+# warm-up decode compile
+tok, _, state = serve_step(params, state, tok, None)
+t0 = time.perf_counter()
+out = [tok]
+for _ in range(args.decode - 1):
+    tok, _, state = serve_step(params, state, tok, None)
+    out.append(tok)
+jax.block_until_ready(tok)
+t_decode = time.perf_counter() - t0
+rate = args.batch * (args.decode - 1) / t_decode
+print(f"decode: {args.decode - 1} steps x{args.batch} in {t_decode:.2f}s "
+      f"({rate:.0f} tok/s, {1e3 * t_decode / (args.decode - 1):.1f} ms/step)")
+
+# perf-model sanity: decode is memory-bound; floor = param+cache bytes / bw
+from repro.analysis.roofline import decode_state_bytes  # noqa: E402
+from repro.configs.base import ShapeSpec  # noqa: E402
+
+shape = ShapeSpec("serve", args.prefill + args.decode, args.batch, "decode")
+floor_bytes = cfg.param_count() * 4 + decode_state_bytes(cfg, shape)
+print(f"memory floor per decode step: {floor_bytes / 1e6:.1f} MB "
+      f"(params + KV cache) -> the serving roofline the §Perf analysis "
+      f"reasons about")
+sample = jnp.stack(out, axis=1)[0, :16]
+print("sample continuation token ids:", list(map(int, sample)))

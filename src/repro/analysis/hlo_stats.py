@@ -1,0 +1,133 @@
+"""Parse compiled/optimized HLO text for collective statistics.
+
+``cost_analysis()`` does not report collective traffic, so the roofline's
+collective term comes from summing operand/result sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+in the (SPMD-partitioned, optimized) HLO.
+
+Wire-byte estimates per device use standard ring-algorithm formulas with the
+replica-group size g parsed from the op:
+    all-gather          R·(g-1)/g      (R = result bytes, per device)
+    all-reduce          2·R·(g-1)/g
+    reduce-scatter      R·(g-1)        (R is the scattered shard)
+    all-to-all          R·(g-1)/g
+    collective-permute  R
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-gather.3 = bf16[16,4096,256]{2,1,0} all-gather(...), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_TUPLE_OP_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SOURCE_TARGET_RE = re.compile(r"source_target_pairs=")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    count: dict = field(default_factory=lambda: defaultdict(int))
+    result_bytes: dict = field(default_factory=lambda: defaultdict(int))
+    wire_bytes: dict = field(default_factory=lambda: defaultdict(float))
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    @property
+    def total_result_bytes(self) -> int:
+        return sum(self.result_bytes.values())
+
+    def to_dict(self) -> dict:
+        return {
+            "count": dict(self.count),
+            "result_bytes": dict(self.result_bytes),
+            "wire_bytes": dict(self.wire_bytes),
+            "total_wire_bytes": self.total_wire_bytes,
+        }
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota form [num_groups,group_size]<=[total]
+        return int(m.group(2))
+    if _SOURCE_TARGET_RE.search(line):
+        return 2
+    return 1
+
+
+def _wire(kind: str, result_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return result_bytes * (g - 1) / g
+    if kind == "all-reduce":
+        return 2 * result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return result_bytes * (g - 1)
+    if kind == "all-to-all":
+        return result_bytes * (g - 1) / g
+    return float(result_bytes)  # collective-permute
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        # skip -done ops (size counted at -start)
+        if re.search(r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)-done", line):
+            continue
+        kind = None
+        rbytes = 0
+        m = _OP_RE.search(line)
+        if m:
+            kind = m.group(3)
+            rbytes = _shape_bytes(m.group(1), m.group(2))
+        else:
+            mt = _TUPLE_OP_RE.search(line)
+            if mt:
+                kind = mt.group(2)
+                # tuple result (e.g. variadic all-gather / -start): sum parts
+                for sm in _SHAPE_RE.finditer(mt.group(1)):
+                    rbytes += _shape_bytes(sm.group(1), sm.group(2))
+            else:
+                continue
+        g = _group_size(line)
+        stats.count[kind] += 1
+        stats.result_bytes[kind] += rbytes
+        stats.wire_bytes[kind] += _wire(kind, rbytes, g)
+    return stats

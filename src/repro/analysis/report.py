@@ -1,0 +1,46 @@
+"""Generate the EXPERIMENTS.md §Dry-run table from the memory-variant
+records (both meshes) — per-cell HBM fit, collective schedule summary,
+compile times. Run:  PYTHONPATH=src python -m repro.analysis.report
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.analysis.roofline import DRYRUN_DIR
+
+HBM = 16e9  # v5e per-chip
+
+
+def dryrun_table(mesh: str = "single", variant: str = "memory") -> str:
+    rows = []
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("mesh") != mesh or rec.get("variant") != variant:
+            continue
+        if rec.get("tag"):
+            continue
+        ma = rec.get("memory_analysis", {})
+        args_gb = ma.get("argument_size_in_bytes", 0) / 1e9
+        temp_gb = ma.get("temp_size_in_bytes", 0) / 1e9
+        tot = args_gb + temp_gb
+        coll = rec.get("collectives", {}).get("count", {})
+        coll_s = " ".join(f"{k.split('-')[0] if False else k}:{v}"
+                          for k, v in sorted(coll.items()))
+        fits = "yes" if tot < HBM / 1e9 else "**NO**"
+        status = "ok" if rec.get("ok") else "FAIL"
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {status} | {args_gb:.2f} | "
+            f"{temp_gb:.2f} | {fits} | {coll_s} | "
+            f"{rec.get('compile_s', 0):.0f}s |")
+    hdr = ("| arch | shape | compile | args GB/dev | temp GB/dev | fits 16GB "
+           "| collectives (count) | compile time |\n"
+           "|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    print(dryrun_table(mesh=mesh))

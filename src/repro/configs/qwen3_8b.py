@@ -1,0 +1,23 @@
+"""Qwen3-8B — GQA + per-head qk-norm [hf:Qwen/Qwen3-8B]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-8b",
+    family="dense",
+    num_layers=36,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=12288,
+    vocab_size=151936,
+    mlp_kind="swiglu",
+    qk_norm=True,
+    rope_theta=1e6,
+    tie_embeddings=False,
+)
+
+SMOKE_CONFIG = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512,
+)

@@ -1,0 +1,90 @@
+"""Finding blocking instructions (§5.1.1).
+
+A *blocking instruction* for a port combination P is an instruction whose
+μops can use all ports in P but no other port sharing those functional
+units. The algorithm:
+
+1. take all 1-μop instructions, excluding system / serializing /
+   zero-latency / PAUSE / register-dependent control flow (§5.1.1),
+2. group them by the set of ports they use when run in isolation,
+3. pick from each group the instruction with the highest throughput
+   (lowest cycles/instr) — this naturally avoids candidates whose implicit
+   read-modify-write operands (flags!) serialize their own instances,
+4. the store-data / store-address combinations get the 2-μop register→memory
+   MOV special case,
+5. SSE and AVX get separate blocking sets to avoid transition penalties.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.isa import ISA, MEM, InstrSpec
+from repro.core.machine import (RegPool, independent_seq, isolation_ports,
+                                measure, total_uops)
+
+
+@dataclass
+class BlockingSet:
+    """port combination -> (instr name, uops the instr puts on that combo)."""
+    instrs: dict = field(default_factory=dict)     # frozenset -> str
+    uops_on_pc: dict = field(default_factory=dict)  # frozenset -> int
+
+    def combos(self) -> list[frozenset]:
+        return list(self.instrs)
+
+
+def _excluded(spec: InstrSpec) -> bool:
+    return (spec.system or spec.serializing or spec.control_flow
+            or spec.is_nop or spec.mnemonic == "PAUSE" or spec.uses_divider)
+
+
+def measured_throughput(machine, spec: InstrSpec, n: int = 8) -> float:
+    pool = RegPool()
+    seq = independent_seq(spec, pool, n)
+    return measure(machine, seq).cycles / n
+
+
+def find_blocking_instructions(machine, isa: ISA,
+                               extensions: tuple[str, ...] = ("BASE", "SSE"),
+                               ) -> BlockingSet:
+    """Discover one blocking instruction per observed port combination.
+
+    ``extensions`` restricts candidates (separate SSE vs AVX sets, §5.1.1).
+    """
+    groups: dict[frozenset, list[tuple[float, str]]] = {}
+    for spec in isa:
+        if _excluded(spec) or spec.extension not in extensions:
+            continue
+        if any(o.otype == MEM and o.written for o in spec.operands):
+            continue  # store combos handled below (2-μop MOV special case)
+        u = total_uops(machine, spec)
+        if abs(u - 1.0) > 0.1:
+            continue  # not a 1-μop instruction (or partially eliminated)
+        ports = frozenset(isolation_ports(machine, spec))
+        if not ports:
+            continue  # zero-latency / eliminated
+        tput = measured_throughput(machine, spec)
+        groups.setdefault(ports, []).append((tput, spec.name))
+
+    bs = BlockingSet()
+    for pc, cand in groups.items():
+        cand.sort()
+        bs.instrs[pc] = cand[0][1]
+        bs.uops_on_pc[pc] = 1
+
+    # store data / store address ports: use the reg->mem MOV (2 μops; one on
+    # the store-data combo, one on the store-address combo).
+    store = next((s for s in isa
+                  if any(o.otype == MEM and o.written for o in s.operands)
+                  and s.mnemonic == "MOV"), None)
+    if store is not None and abs(total_uops(machine, store) - 2.0) < 0.1:
+        dist = isolation_ports(machine, store)
+        # the store-data μop pins one port (~1 μop/instance); the
+        # store-address μop spreads over its AGU ports (fractional counts)
+        data_pc = frozenset(p for p in dist if dist[p] > 0.9)
+        addr_pc = frozenset(p for p in dist if 0.05 < dist[p] <= 0.9)
+        for pc in (data_pc, addr_pc):
+            if pc and pc not in bs.instrs:
+                bs.instrs[pc] = store.name
+                bs.uops_on_pc[pc] = 1
+    return bs

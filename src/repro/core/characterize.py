@@ -1,0 +1,84 @@
+"""Full-ISA characterization: the paper's tool pipeline.
+
+For every supported instruction variant:
+  1. per-operand-pair latencies (§5.2)  — also provides maxLatency for 2.,
+  2. port usage via Algorithm 1 (§5.1)  — needs the blocking instructions,
+  3. measured throughput (§5.3.1) and LP throughput from port usage (§5.3.2).
+
+The result (:class:`PerfModel`) is the machine-readable artifact (§6.4)
+consumed by the predictor and exported to XML/JSON by ``model_io``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+from repro.core.blocking import BlockingSet, find_blocking_instructions
+from repro.core.isa import ISA, InstrSpec
+from repro.core.latency import LatencyAnalyzer, LatencyResult
+from repro.core.machine import total_uops
+from repro.core.port_usage import PortUsage, infer_port_usage
+from repro.core.throughput import (ThroughputResult, computed_throughput,
+                                   measure_throughput)
+
+
+@dataclass
+class InstrModel:
+    name: str
+    uops: float = 0.0
+    port_usage: PortUsage | None = None
+    latency: LatencyResult | None = None
+    throughput: ThroughputResult | None = None
+
+    @property
+    def max_latency(self) -> int:
+        return self.latency.max_latency() if self.latency else 1
+
+
+@dataclass
+class PerfModel:
+    uarch: str
+    instructions: dict = field(default_factory=dict)  # name -> InstrModel
+    blocking: dict = field(default_factory=dict)      # "p05" -> instr name
+    run_seconds: float = 0.0
+
+    def __getitem__(self, name: str) -> InstrModel:
+        return self.instructions[name]
+
+
+def _supported(spec: InstrSpec) -> bool:
+    """Paper §8 limitations: system / serializing / control-flow
+    instructions are not characterized."""
+    return not (spec.system or spec.serializing or spec.control_flow
+                or spec.is_nop)
+
+
+def characterize(machine, isa: ISA, instr_names=None,
+                 blocking: BlockingSet | None = None) -> PerfModel:
+    t0 = time.time()
+    if blocking is None:
+        # separate SSE / AVX blocking sets (transition penalties, §5.1.1);
+        # merged here since the simulated core has no penalty — the split
+        # code path is exercised by dedicated tests.
+        blocking = find_blocking_instructions(machine, isa,
+                                              extensions=("BASE", "SSE"))
+    model = PerfModel(machine.name)
+    model.blocking = {"p" + "".join(sorted(pc)): nm
+                      for pc, nm in blocking.instrs.items()}
+    lat_an = LatencyAnalyzer(machine, isa)
+    names = instr_names if instr_names is not None else isa.names()
+    for name in names:
+        spec = isa[name]
+        if not _supported(spec):
+            continue
+        im = InstrModel(name)
+        im.latency = lat_an.analyze(spec)
+        im.uops = round(total_uops(machine, spec), 2)
+        im.port_usage = infer_port_usage(machine, isa, spec, blocking,
+                                         im.max_latency)
+        im.throughput = measure_throughput(machine, isa, spec)
+        im.throughput.computed_from_ports = computed_throughput(
+            im.port_usage, spec)
+        model.instructions[name] = im
+    model.run_seconds = time.time() - t0
+    return model

@@ -1,0 +1,79 @@
+"""Wall-clock measurement backend for real jitted JAX ops.
+
+This is the paper's hardware-measurement path applied to the op granularity
+that exists on an XLA backend: per-port μop counters don't exist here (they
+are simulator-only), so this backend produces *latency* (dependent-chain)
+and *throughput* (independent-lanes) tables — exactly the situation the
+paper faces on microarchitectures IACA doesn't support.
+
+Protocol = Algorithm 2 adapted to wall clock: warm-up compile+run, then time
+chains of n_small vs n_large applications and difference — cancelling the
+dispatch/jit-call overhead the same way the serializing-instruction overhead
+is cancelled on x86.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class OpMeasurement:
+    name: str
+    latency_ns: float      # dependent-chain ns/op
+    throughput_ns: float   # independent-lanes ns/op
+    flops: float = 0.0     # per application (analytic, from the corpus)
+
+    @property
+    def achieved_gflops(self) -> float:
+        return (self.flops / self.throughput_ns) if self.throughput_ns else 0.0
+
+
+def _time_callable(f, *args, reps: int = 5) -> float:
+    f(*args)  # warm-up (compile + caches)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter_ns()
+        jax.block_until_ready(f(*args))
+        best = min(best, time.perf_counter_ns() - t0)
+    return best
+
+
+def _chain(f, n: int):
+    def run(x):
+        return jax.lax.fori_loop(0, n, lambda _, v: f(v), x)
+
+    return jax.jit(run)
+
+
+def _lanes(f, n: int, lanes: int):
+    vf = jax.vmap(f)
+
+    def run(x):
+        return jax.lax.fori_loop(0, n, lambda _, v: vf(v), x)
+
+    return jax.jit(run)
+
+
+def measure_op(name: str, f, example, *, n_small: int = 8, n_large: int = 72,
+               lanes: int = 8, flops: float = 0.0) -> OpMeasurement:
+    """f must be shape-preserving (chainable): f(x) -> x-like."""
+    t1 = _time_callable(_chain(f, n_small), example)
+    t2 = _time_callable(_chain(f, n_large), example)
+    lat = max((t2 - t1) / (n_large - n_small), 0.0)
+    xs = jnp.stack([example] * lanes)
+    t1 = _time_callable(_lanes(f, n_small, lanes), xs)
+    t2 = _time_callable(_lanes(f, n_large, lanes), xs)
+    tput = max((t2 - t1) / ((n_large - n_small) * lanes), 0.0)
+    return OpMeasurement(name, lat, tput, flops)
+
+
+def characterize_corpus(corpus: dict, **kw) -> dict[str, OpMeasurement]:
+    """corpus: name -> (fn, example, flops)."""
+    out = {}
+    for name, (f, example, flops) in corpus.items():
+        out[name] = measure_op(name, f, example, flops=flops, **kw)
+    return out

@@ -1,0 +1,58 @@
+"""Kernel-level unit-occupancy attribution via blocking kernels.
+
+The counter-free variant of Algorithm 1, one level up: on machines without
+per-unit counters, co-schedule the target kernel K with each blocking kernel
+B_u (kernels/microbench.py saturates one unit each) and classify from the
+contention signature
+
+    overlap(K, B_u) = (t(K) + t(B_u) - t(K ; B_u)) / min(t(K), t(B_u))
+
+≈ 1: K and B_u use *different* units (their execution overlaps fully);
+≈ 0: same unit (serialized — the unit is the contended resource).
+
+On this CPU container everything serializes (overlap ≈ 0 across the board);
+the harness is validated for protocol invariants (t(K;B) between max and
+sum + slack) and produces real attributions when run on a TPU.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+
+
+@dataclass
+class KernelProfile:
+    name: str
+    alone_ns: float
+    overlap: dict = field(default_factory=dict)  # unit -> coefficient
+
+    def likely_units(self, threshold: float = 0.5) -> list[str]:
+        return [u for u, c in self.overlap.items() if c < threshold]
+
+
+def _time(f, reps: int = 5) -> float:
+    jax.block_until_ready(f())
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter_ns()
+        jax.block_until_ready(f())
+        best = min(best, time.perf_counter_ns() - t0)
+    return best
+
+
+def profile_kernel(name: str, target_fn, blockers: dict) -> KernelProfile:
+    """target_fn and each blocker: nullary callables returning arrays."""
+    t_k = _time(jax.jit(target_fn))
+    prof = KernelProfile(name, t_k)
+    for unit, blk in blockers.items():
+        t_b = _time(jax.jit(blk))
+
+        def both(blk=blk):
+            return target_fn(), blk()
+
+        t_kb = _time(jax.jit(both))
+        denom = min(t_k, t_b)
+        prof.overlap[unit] = ((t_k + t_b - t_kb) / denom) if denom else 0.0
+    return prof

@@ -1,0 +1,353 @@
+"""Per-operand-pair latency inference (§4.1 definition, §5.2 algorithms).
+
+lat: S × D → ℕ maps every (source operand, destination operand) pair to its
+own latency — the paper's central definitional contribution. Inference
+builds cyclic dependency chains per pair:
+
+  * gpr→gpr: MOVSX chain (avoids move elimination and partial-register
+    stalls — the reasons the paper rejects MOV/MOVZX, §5.2.1),
+  * vec→vec: both an integer (PSHUFD) and an fp (MOVSHDUP) non-destructive
+    shuffle, to expose bypass-delay differences,
+  * type-crossing pairs: compositions with every candidate chain instruction;
+    min composite − 1 reported as an upper bound,
+  * flags→reg: TEST R,R closes the loop (§5.2.3); reg→flags via SETC,
+  * mem→reg: the double-XOR address trick (§5.2.2),
+  * reg→mem: store→load round trip (store-to-load forwarding caveat, §5.2.4),
+  * dividers: operand values pinned with AND/OR idempotent masking (§5.2.5).
+
+Unwanted implicit dependencies (status flags, read-modify-write operands not
+under test) are cut with dependency-breaking instructions: TEST on an
+independent register for flags, a zero idiom for registers.
+
+Each register→register pair with two explicit same-type operands is also
+measured with *the same register* for both operands — the scenario that
+explains the SHLD discrepancies between published numbers (§7.3.2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.isa import FLAGS, GPR, IMM, ISA, MEM, VEC, InstrSpec
+from repro.core.machine import RegPool, measure
+from repro.core.simulator import Instr
+
+# dedicated registers (never handed out by pools sized 16/16/8)
+CHAIN_GPR = ("R24", "R25")
+CHAIN_VEC = ("X24", "X25")
+BREAK_GPR = "R26"
+AUX_GPR = ("R27", "R28")
+AUX_VEC = ("X27", "X28")
+MEM_BASE = "R23"
+
+
+@dataclass
+class LatencyEntry:
+    src: str
+    dst: str
+    value: float
+    kind: str = "exact"  # exact | upper_bound | roundtrip
+    chain: str = ""
+    same_reg: float | None = None
+    high_value: float | None = None  # divider high-latency operand class
+    per_chain: dict = field(default_factory=dict)
+
+
+@dataclass
+class LatencyResult:
+    instr: str
+    entries: dict = field(default_factory=dict)  # (src,dst) -> LatencyEntry
+
+    def get(self, src: str, dst: str) -> LatencyEntry | None:
+        return self.entries.get((src, dst))
+
+    def max_latency(self) -> int:
+        vals = [e.value for e in self.entries.values()]
+        vals += [e.high_value for e in self.entries.values()
+                 if e.high_value is not None]
+        return max(1, round(max(vals))) if vals else 1
+
+
+class LatencyAnalyzer:
+    def __init__(self, machine, isa: ISA):
+        self.machine = machine
+        self.isa = isa
+        self._boot()
+
+    # -- low-level helpers --------------------------------------------------
+    def _cycles(self, seq: list[Instr]) -> float:
+        return measure(self.machine, seq).cycles
+
+    def _flags_break(self) -> Instr:
+        return Instr("TEST_R64_R64", {"op1": BREAK_GPR, "op2": BREAK_GPR})
+
+    def _reg_break(self, reg: str, otype: str) -> Instr:
+        """Overwrite ``reg`` without depending on it and — crucial for the
+        flags→reg chains — without touching the status flags (a zero-idiom
+        XOR would overwrite FLAGS and cut the dependency under test)."""
+        if otype == GPR:
+            return Instr("MOV_R64_R64", {"op1": reg, "op2": BREAK_GPR})
+        return Instr("PCMPGTQ_X_X", {"op1": reg, "op2": reg})
+
+    def _chain_instr(self, name: str, dst: str, src: str) -> Instr:
+        return Instr(name, {"op1": dst, "op2": src})
+
+    def _boot(self):
+        """Measure the chain-instruction latencies (§5.2: 'known or easy to
+        determine in isolation'). TEST's reg→flags latency is the single
+        bootstrap assumption (= 1 cycle), as in the paper's methodology."""
+        self.lat_test = 1.0
+        a, b = CHAIN_GPR
+        # MOVSX self-chain: MOVSX a,b ; MOVSX b,a
+        self.lat_movsx = self._cycles([
+            self._chain_instr("MOVSX_R64_R32", a, b),
+            self._chain_instr("MOVSX_R64_R32", b, a)]) / 2
+        va, vb = CHAIN_VEC
+        self.vec_chains = {}
+        for nm in ("PSHUFD_X_X", "MOVSHDUP_X_X"):
+            if nm in self.isa:
+                self.vec_chains[nm] = self._cycles([
+                    self._chain_instr(nm, va, vb),
+                    self._chain_instr(nm, vb, va)]) / 2
+        # XOR lat(op1,op1): XOR a, aux (RMW self-chain; flags written only)
+        self.lat_xor = (self._cycles([
+            Instr("XOR_R64_R64", {"op1": a, "op2": AUX_GPR[0]})])
+            if "XOR_R64_R64" in self.isa else 1.0)
+        # SETC via TEST+SETC+MOVSX loop
+        if "TEST_R64_R64" in self.isa and "SETC_R8" in self.isa:
+            mv = ("MOVSX_R64_R8" if "MOVSX_R64_R8" in self.isa
+                  else "MOVSX_R64_R32")
+            comp = self._cycles([
+                Instr("TEST_R64_R64", {"op1": a, "op2": a}),
+                Instr("SETC_R8", {"op1": b}),
+                self._chain_instr(mv, a, b)])
+            self.lat_setc = max(comp - self.lat_test - self.lat_movsx, 0.0)
+        else:
+            self.lat_setc = 1.0
+        # type-crossing chain candidates: (vec->gpr) and (gpr->vec) movers
+        self.cross = {"to_gpr": [], "to_vec": []}
+        for s in self.isa:
+            ops = s.explicit_operands
+            if len(ops) != 2 or any(o.otype == IMM for o in ops):
+                continue
+            d, src = ops[0], ops[1]
+            if d.written and not d.read and src.read:
+                if d.otype == GPR and src.otype == VEC:
+                    self.cross["to_gpr"].append(s.name)
+                elif d.otype == VEC and src.otype == GPR:
+                    self.cross["to_vec"].append(s.name)
+
+    # -- link builders ------------------------------------------------------
+    def _breakers(self, spec: InstrSpec, skip: set) -> list[Instr]:
+        """Dependency-breaking instructions for RMW operands not under test."""
+        out = []
+        for o in spec.operands:
+            if o.name in skip or not o.rmw:
+                continue
+            if o.otype == FLAGS:
+                out.append(self._flags_break())
+        # flags written by chain XORs etc. are broken by the same TEST
+        return out
+
+    def _assign(self, spec: InstrSpec, fixed: dict) -> dict:
+        """Registers for all explicit operands; unfixed ones get aux regs."""
+        regs = dict(fixed)
+        gi = vi = 0
+        for o in spec.explicit_operands:
+            if o.name in regs or o.otype == IMM:
+                continue
+            if o.otype == GPR:
+                regs[o.name] = AUX_GPR[gi % len(AUX_GPR)]
+                gi += 1
+            elif o.otype == VEC:
+                regs[o.name] = AUX_VEC[vi % len(AUX_VEC)]
+                vi += 1
+            elif o.otype == MEM:
+                regs[o.name] = MEM_BASE
+        return regs
+
+    # -- per-case measurements ----------------------------------------------
+    def _reg_reg(self, spec, s, d, value_hint="low"):
+        """Same-type register→register (gpr or vec)."""
+        otype = s.otype
+        ca, cb = CHAIN_GPR if otype == GPR else CHAIN_VEC
+        chains = ({"MOVSX_R64_R32": self.lat_movsx} if otype == GPR
+                  else self.vec_chains)
+        per_chain = {}
+        for cname, clat in chains.items():
+            link: list[Instr] = []
+            if s.name == d.name:
+                regs = self._assign(spec, {s.name: ca})
+                link += self._breakers(spec, {s.name})
+                link.append(Instr(spec.name, regs, value_hint))
+                per_chain[cname] = self._cycles(link)
+            else:
+                fixed = {s.name: ca, d.name: cb}
+                regs = self._assign(spec, fixed)
+                link += self._breakers(spec, {s.name, d.name})
+                if d.read:  # RMW dest: break the old-value dependency
+                    link.append(self._reg_break(cb, otype))
+                link.append(Instr(spec.name, regs, value_hint))
+                link.append(self._chain_instr(cname, ca, cb))
+                per_chain[cname] = self._cycles(link) - clat
+        val = min(per_chain.values())
+        e = LatencyEntry(s.name, d.name, val, "exact",
+                         chain="|".join(per_chain), per_chain=per_chain)
+        # same-register scenario (§7.3.2)
+        ex_regs = [o for o in spec.explicit_operands
+                   if o.otype == otype]
+        if s.name != d.name and len(ex_regs) >= 2:
+            regs = self._assign(spec, {s.name: ca, d.name: ca})
+            link = self._breakers(spec, {s.name, d.name})
+            link.append(Instr(spec.name, regs, value_hint))
+            e.same_reg = self._cycles(link)
+        return e
+
+    def _flags_to_reg(self, spec, s, d):
+        ca = CHAIN_GPR[0]
+        link = []
+        link.append(Instr("TEST_R64_R64", {"op1": ca, "op2": ca}))
+        if d.read:
+            link.append(self._reg_break(ca, GPR))
+        regs = self._assign(spec, {d.name: ca})
+        link.append(Instr(spec.name, regs))
+        return LatencyEntry(s.name, d.name,
+                            self._cycles(link) - self.lat_test,
+                            "exact", chain="TEST")
+
+    def _reg_to_flags(self, spec, s, d):
+        if s.otype != GPR:
+            return None
+        ca, cb = CHAIN_GPR
+        regs = self._assign(spec, {s.name: ca})
+        link = self._breakers(spec, {s.name, d.name})
+        link.append(Instr(spec.name, regs))
+        link.append(Instr("SETC_R8", {"op1": cb}))
+        # width-matched MOVSX: SETC writes 8 bits; reading wider would incur
+        # a partial-register stall and corrupt the measurement (§5.2.1)
+        mv = "MOVSX_R64_R8" if "MOVSX_R64_R8" in self.isa else "MOVSX_R64_R32"
+        link.append(self._chain_instr(mv, ca, cb))
+        val = self._cycles(link) - self.lat_setc - self.lat_movsx
+        return LatencyEntry(s.name, d.name, val, "exact", chain="SETC+MOVSX")
+
+    def _flags_to_flags(self, spec, s, d):
+        link = [Instr(spec.name, self._assign(spec, {}))]
+        return LatencyEntry(s.name, d.name, self._cycles(link), "exact",
+                            chain="self")
+
+    def _mem_to_reg(self, spec, s, d):
+        """Double-XOR trick: address depends on the loaded result (§5.2.2)."""
+        rb = MEM_BASE
+        regs = self._assign(spec, {s.name: rb})
+        rd = regs.get(d.name)
+        if d.otype == VEC:
+            # vec dest: compose with vec->gpr mover for an upper bound
+            best, per = None, {}
+            for mv in self.cross["to_gpr"]:
+                link = []
+                if d.read:  # break the RMW old-value loop (e.g. AESDEC m128)
+                    link.append(self._reg_break(regs[d.name], VEC))
+                link += [Instr(spec.name, regs),
+                         Instr(mv, {"op1": CHAIN_GPR[0], "op2": regs[d.name]}),
+                         Instr("XOR_R64_R64", {"op1": rb, "op2": CHAIN_GPR[0]}),
+                         Instr("XOR_R64_R64", {"op1": rb, "op2": CHAIN_GPR[0]}),
+                         self._flags_break()]
+                per[mv] = self._cycles(link) - 2 * self.lat_xor
+                best = per[mv] if best is None else min(best, per[mv])
+            return LatencyEntry(s.name, d.name, max(best - 1, 0),
+                                "upper_bound", chain="xor2+cross",
+                                per_chain=per)
+        link = self._breakers(spec, {s.name, d.name})
+        link.append(Instr(spec.name, regs))
+        link.append(Instr("XOR_R64_R64", {"op1": rb, "op2": rd}))
+        link.append(Instr("XOR_R64_R64", {"op1": rb, "op2": rd}))
+        link.append(self._flags_break())
+        return LatencyEntry(s.name, d.name,
+                            self._cycles(link) - 2 * self.lat_xor,
+                            "exact", chain="xor2")
+
+    def _reg_to_mem(self, spec, s, d):
+        """Store: measure a store→load round trip (§5.2.4)."""
+        rb = MEM_BASE
+        if s.otype == VEC:
+            if "MOVAPS_X_M" not in self.isa:
+                return None
+            load, ca, cb = "MOVAPS_X_M", CHAIN_VEC[0], CHAIN_VEC[1]
+            chain = next(iter(self.vec_chains)) if self.vec_chains else None
+            clat = self.vec_chains.get(chain, 1.0)
+        else:
+            load, ca, cb = "MOV_R64_M64", CHAIN_GPR[0], CHAIN_GPR[1]
+            chain, clat = "MOVSX_R64_R32", self.lat_movsx
+        regs = self._assign(spec, {s.name: ca, d.name: rb})
+        link = [Instr(spec.name, regs),
+                Instr(load, {"op1": cb, "mem": rb})]
+        if chain:
+            link.append(self._chain_instr(chain, ca, cb))
+        val = self._cycles(link) - clat
+        return LatencyEntry(s.name, d.name, val, "roundtrip",
+                            chain=f"store+{load}")
+
+    def _cross_type(self, spec, s, d):
+        """Different register types: compositions, upper bound (§5.2.1)."""
+        per = {}
+        if d.otype == VEC and s.otype == GPR:
+            movers = self.cross["to_gpr"]  # vec result -> gpr source
+            for mv in movers:
+                regs = self._assign(spec, {s.name: CHAIN_GPR[0],
+                                           d.name: CHAIN_VEC[0]})
+                link = self._breakers(spec, {s.name, d.name})
+                if d.read:
+                    link.append(self._reg_break(CHAIN_VEC[0], VEC))
+                link.append(Instr(spec.name, regs))
+                link.append(Instr(mv, {"op1": CHAIN_GPR[0],
+                                       "op2": CHAIN_VEC[0]}))
+                per[mv] = self._cycles(link)
+        elif d.otype == GPR and s.otype == VEC:
+            movers = self.cross["to_vec"]
+            for mv in movers:
+                regs = self._assign(spec, {s.name: CHAIN_VEC[0],
+                                           d.name: CHAIN_GPR[0]})
+                link = self._breakers(spec, {s.name, d.name})
+                if d.read:
+                    link.append(self._reg_break(CHAIN_GPR[0], GPR))
+                link.append(Instr(spec.name, regs))
+                link.append(Instr(mv, {"op1": CHAIN_VEC[0],
+                                       "op2": CHAIN_GPR[0]}))
+                per[mv] = self._cycles(link)
+        if not per:
+            return None
+        return LatencyEntry(s.name, d.name, max(min(per.values()) - 1, 0),
+                            "upper_bound", chain="compose", per_chain=per)
+
+    # -- public entry point ---------------------------------------------------
+    def analyze(self, instr: InstrSpec | str) -> LatencyResult:
+        spec = self.isa[instr] if isinstance(instr, str) else instr
+        res = LatencyResult(spec.name)
+        for s in spec.sources:
+            if s.otype == IMM:
+                continue
+            for d in spec.dests:
+                e = self._pair(spec, s, d)
+                if e is not None:
+                    if spec.uses_divider and e.kind == "exact":
+                        eh = self._pair(spec, s, d, value_hint="high")
+                        if eh is not None:
+                            e.high_value = eh.value
+                    res.entries[(s.name, d.name)] = e
+        return res
+
+    def _pair(self, spec, s, d, value_hint="low"):
+        if s.otype == FLAGS and d.otype == FLAGS:
+            return self._flags_to_flags(spec, s, d)
+        if s.otype == FLAGS:
+            if d.otype != GPR:
+                return None
+            return self._flags_to_reg(spec, s, d)
+        if d.otype == FLAGS:
+            return self._reg_to_flags(spec, s, d)
+        if s.otype == MEM:
+            return self._mem_to_reg(spec, s, d)
+        if d.otype == MEM:
+            return self._reg_to_mem(spec, s, d)
+        if s.otype == d.otype:
+            return self._reg_reg(spec, s, d, value_hint)
+        return self._cross_type(spec, s, d)

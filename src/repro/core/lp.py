@@ -1,0 +1,88 @@
+"""Throughput-from-port-usage LP (§5.3.2).
+
+    minimize   max_p Σ_{(pc,μ)} f(p, pc)
+    subject to f(p, pc) = 0             for p ∉ pc
+               Σ_p f(p, pc) = μ         for every (pc, μ)
+
+Linearized with z ≥ Σ f(p, pc) per port. Solved with scipy's HiGHS; a pure
+bisection + max-flow feasibility fallback (networkx) covers environments
+without scipy and doubles as an independent check in tests.
+"""
+from __future__ import annotations
+
+
+def throughput_lp(usage: dict, ports=None) -> float:
+    """``usage``: {frozenset(ports): uop_count}. Returns min-max port load
+    (= Intel-definition throughput, Def. 1, for divider-free instructions)."""
+    usage = {pc: float(n) for pc, n in usage.items() if n > 0}
+    if not usage:
+        return 0.0
+    all_ports = sorted(set().union(*usage)) if ports is None else list(ports)
+    try:
+        return _scipy_lp(usage, all_ports)
+    except ImportError:  # pragma: no cover
+        return _bisect_flow(usage, all_ports)
+
+
+def _scipy_lp(usage: dict, ports: list) -> float:
+    import numpy as np
+    from scipy.optimize import linprog
+
+    pcs = list(usage)
+    # variables: f(p, pc) for p in pc (flattened), then z
+    var_idx = {}
+    for pc in pcs:
+        for p in pc:
+            var_idx[(p, pc)] = len(var_idx)
+    nz = len(var_idx)
+    c = np.zeros(nz + 1)
+    c[nz] = 1.0  # minimize z
+    # equality: sum_p f(p,pc) = mu
+    A_eq = np.zeros((len(pcs), nz + 1))
+    b_eq = np.zeros(len(pcs))
+    for i, pc in enumerate(pcs):
+        for p in pc:
+            A_eq[i, var_idx[(p, pc)]] = 1.0
+        b_eq[i] = usage[pc]
+    # inequality: sum_pc f(p,pc) - z <= 0
+    A_ub = np.zeros((len(ports), nz + 1))
+    for j, p in enumerate(ports):
+        for pc in pcs:
+            if p in pc:
+                A_ub[j, var_idx[(p, pc)]] = 1.0
+        A_ub[j, nz] = -1.0
+    res = linprog(c, A_ub=A_ub, b_ub=np.zeros(len(ports)), A_eq=A_eq,
+                  b_eq=b_eq, bounds=[(0, None)] * (nz + 1), method="highs")
+    if not res.success:  # pragma: no cover
+        raise RuntimeError(f"LP failed: {res.message}")
+    return float(res.x[nz])
+
+
+def _bisect_flow(usage: dict, ports: list, tol: float = 1e-6) -> float:
+    """Feasibility of makespan z == max-flow saturation in the bipartite
+    graph pc -> ports with port capacity z."""
+    import networkx as nx
+
+    total = sum(usage.values())
+    lo, hi = 0.0, float(total)
+
+    def feasible(z: float) -> bool:
+        g = nx.DiGraph()
+        for i, (pc, mu) in enumerate(usage.items()):
+            g.add_edge("s", f"c{i}", capacity=mu)
+            for p in pc:
+                g.add_edge(f"c{i}", f"p{p}", capacity=mu)
+        for p in ports:
+            g.add_edge(f"p{p}", "t", capacity=z)
+        val = nx.maximum_flow_value(g, "s", "t")
+        return val >= total - 1e-9
+
+    for _ in range(60):
+        mid = (lo + hi) / 2
+        if feasible(mid):
+            hi = mid
+        else:
+            lo = mid
+        if hi - lo < tol:
+            break
+    return hi

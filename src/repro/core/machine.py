@@ -1,0 +1,117 @@
+"""Measurement protocol (Algorithm 2) and microbenchmark code generation.
+
+``measure`` implements the paper's overhead-cancellation protocol: run the
+benchmark body with n=10 and n=110 copies, difference the counters and divide
+by 100. The machine's raw ``run`` includes harness overhead (serializing
+instructions, counter reads — emulated by the simulator; real wall-clock
+overhead on the hardware backend), so this differencing is doing real work.
+
+``RegPool``/instance builders generate operand assignments with the
+independence properties the paper's generators need: distinct registers per
+operand, round-robin pools so repeated instances don't chain, and explicit
+"avoid" sets so benchmark code never collides with the chain registers.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+
+from repro.core.isa import FLAGS, GPR, IMM, MEM, VEC, InstrSpec
+from repro.core.simulator import Counters, Instr
+
+N_SMALL = 10
+N_LARGE = 110
+
+
+def measure(machine, seq: list[Instr], n_small: int = N_SMALL,
+            n_large: int = N_LARGE) -> Counters:
+    """Per-copy cycles and per-port μop counts for one copy of ``seq``."""
+    c1 = machine.run(list(seq) * n_small)
+    c2 = machine.run(list(seq) * n_large)
+    d = n_large - n_small
+    ports = {p: (c2.port_uops.get(p, 0) - c1.port_uops.get(p, 0)) / d
+             for p in set(c1.port_uops) | set(c2.port_uops)}
+    return Counters((c2.cycles - c1.cycles) / d, ports)
+
+
+@dataclass
+class RegPool:
+    """Round-robin architectural register pools per operand type."""
+    n_gpr: int = 16
+    n_vec: int = 16
+    n_mem: int = 8
+
+    def __post_init__(self):
+        self._iters = {}
+
+    def _names(self, otype: str):
+        if otype == GPR:
+            return [f"R{i}" for i in range(self.n_gpr)]
+        if otype == VEC:
+            return [f"X{i}" for i in range(self.n_vec)]
+        if otype == MEM:
+            return [f"RB{i}" for i in range(self.n_mem)]  # base registers
+        if otype == FLAGS:
+            return ["FLAGS"]
+        return ["IMM"]
+
+    def take(self, otype: str, avoid: set = frozenset()) -> str:
+        it = self._iters.get(otype)
+        if it is None:
+            it = self._iters[otype] = itertools.cycle(self._names(otype))
+        for _ in range(4 * len(self._names(otype))):
+            r = next(it)
+            if r not in avoid:
+                return r
+        raise RuntimeError(f"register pool exhausted for {otype}")
+
+
+def fresh_instance(spec: InstrSpec, pool: RegPool,
+                   avoid: set = frozenset(), value_hint: str = "low") -> Instr:
+    """Instance with distinct registers per explicit operand (independent
+    from ``avoid`` and, via round-robin, from recent instances)."""
+    regs = {}
+    used = set(avoid)
+    for o in spec.explicit_operands:
+        if o.otype == IMM:
+            continue
+        r = pool.take(o.otype, used)
+        regs[o.name] = r
+        used.add(r)
+    return Instr(spec.name, regs, value_hint)
+
+
+def independent_seq(spec: InstrSpec, pool: RegPool, n: int,
+                    avoid: set = frozenset(),
+                    value_hint: str = "low") -> list[Instr]:
+    """n instances avoiding read-after-write dependencies as far as operand
+    structure allows (§5.3.1): every instance gets fresh registers; implicit
+    RMW operands (e.g. flags) cannot be decoupled — that is the point."""
+    return [fresh_instance(spec, pool, avoid, value_hint) for _ in range(n)]
+
+
+def flags_breaker(isa, pool: RegPool, avoid: set = frozenset()) -> Instr:
+    """Dependency-breaking instruction for the status flags: overwrites all
+    flags without reading them (TEST R, R on an independent register)."""
+    spec = isa["TEST_R64_R64"]
+    r = pool.take(GPR, avoid)
+    return Instr(spec.name, {"op1": r, "op2": r})
+
+
+def total_uops(machine, spec: InstrSpec, pool: RegPool | None = None,
+               n: int = 12) -> float:
+    """Average μop count of one instance, from independent repetitions."""
+    pool = pool or RegPool()
+    seq = independent_seq(spec, pool, n)
+    c = measure(machine, seq)
+    return c.total_uops / n
+
+
+def isolation_ports(machine, spec: InstrSpec, n: int = 12,
+                    eps: float = 0.05) -> dict[str, float]:
+    """Per-port μop distribution when run in isolation (the naive signal
+    that §5.1 shows is ambiguous). Returns per-instance averages."""
+    pool = RegPool()
+    seq = independent_seq(spec, pool, n)
+    c = measure(machine, seq)
+    return {p: v / n for p, v in c.port_uops.items() if v / n > eps}

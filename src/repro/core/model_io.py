@@ -1,0 +1,126 @@
+"""Machine-readable output (§6.4): XML (uops.info-style) and JSON.
+
+The XML schema mirrors uops.info's: one <instruction> element per variant
+with <operand> children and per-architecture <architecture><measurement>
+elements carrying ports=, uops=, plus <latency> edges per (src,dst) operand
+pair. Round-trips losslessly through ``load_xml`` (used by the predictor and
+by tests).
+"""
+from __future__ import annotations
+
+import json
+import xml.etree.ElementTree as ET
+from xml.dom import minidom
+
+from repro.core.characterize import InstrModel, PerfModel
+from repro.core.latency import LatencyEntry, LatencyResult
+from repro.core.port_usage import PortUsage
+from repro.core.throughput import ThroughputResult
+
+
+def _fmt(x) -> str:
+    return f"{x:.6f}".rstrip("0").rstrip(".") if isinstance(x, float) else str(x)
+
+
+def to_xml(model: PerfModel, isa=None) -> str:
+    root = ET.Element("root")
+    arch = ET.SubElement(root, "architecture", name=model.uarch)
+    blk = ET.SubElement(arch, "blockingInstructions")
+    for pc, nm in sorted(model.blocking.items()):
+        ET.SubElement(blk, "blocking", ports=pc, instr=nm)
+    for name, im in sorted(model.instructions.items()):
+        el = ET.SubElement(root, "instruction", name=name)
+        if isa is not None and name in isa:
+            spec = isa[name]
+            el.set("mnemonic", spec.mnemonic)
+            el.set("extension", spec.extension)
+            for o in spec.operands:
+                ET.SubElement(el, "operand", name=o.name, type=o.otype,
+                              r=str(int(o.read)), w=str(int(o.written)),
+                              implicit=str(int(o.implicit)),
+                              width=str(o.width))
+        m = ET.SubElement(el, "measurement", arch=model.uarch,
+                          uops=_fmt(im.uops))
+        if im.port_usage is not None:
+            m.set("ports", im.port_usage.notation())
+        tp = im.throughput
+        if tp is not None:
+            m.set("tp_measured", _fmt(tp.measured))
+            if tp.computed_from_ports is not None:
+                m.set("tp_ports", _fmt(tp.computed_from_ports))
+            if tp.high_value is not None:
+                m.set("tp_high", _fmt(tp.high_value))
+        if im.latency is not None:
+            for (s, d), e in sorted(im.latency.entries.items()):
+                le = ET.SubElement(m, "latency", src=s, dst=d,
+                                   cycles=_fmt(e.value), kind=e.kind)
+                if e.same_reg is not None:
+                    le.set("same_reg", _fmt(e.same_reg))
+                if e.high_value is not None:
+                    le.set("high", _fmt(e.high_value))
+    return minidom.parseString(ET.tostring(root)).toprettyxml(indent=" ")
+
+
+def load_xml(text: str) -> PerfModel:
+    root = ET.fromstring(text)
+    arch = root.find("architecture")
+    model = PerfModel(arch.get("name"))
+    blk = arch.find("blockingInstructions")
+    for b in (blk if blk is not None else []):
+        model.blocking[b.get("ports")] = b.get("instr")
+    for el in root.findall("instruction"):
+        name = el.get("name")
+        im = InstrModel(name)
+        m = el.find("measurement")
+        im.uops = float(m.get("uops"))
+        pu = PortUsage()
+        if m.get("ports") and m.get("ports") != "0":
+            for part in m.get("ports").split("+"):
+                n, pc = part.split("*p")
+                pu.usage[frozenset(pc)] = int(n)
+        pu.total_uops = im.uops
+        im.port_usage = pu
+        tp = ThroughputResult(name)
+        tp.measured = float(m.get("tp_measured", 0))
+        if m.get("tp_ports"):
+            tp.computed_from_ports = float(m.get("tp_ports"))
+        if m.get("tp_high"):
+            tp.high_value = float(m.get("tp_high"))
+        im.throughput = tp
+        lat = LatencyResult(name)
+        for le in m.findall("latency"):
+            e = LatencyEntry(le.get("src"), le.get("dst"),
+                             float(le.get("cycles")), le.get("kind"))
+            if le.get("same_reg"):
+                e.same_reg = float(le.get("same_reg"))
+            if le.get("high"):
+                e.high_value = float(le.get("high"))
+            lat.entries[(e.src, e.dst)] = e
+        im.latency = lat
+        model.instructions[name] = im
+    return model
+
+
+def to_json(model: PerfModel) -> str:
+    out = {"uarch": model.uarch, "blocking": model.blocking,
+           "run_seconds": model.run_seconds, "instructions": {}}
+    for name, im in model.instructions.items():
+        rec = {"uops": im.uops,
+               "ports": im.port_usage.notation() if im.port_usage else None,
+               "throughput": None, "latency": {}}
+        if im.throughput:
+            rec["throughput"] = {
+                "measured": im.throughput.measured,
+                "by_seq_len": im.throughput.by_seq_len,
+                "with_breakers": im.throughput.with_breakers,
+                "computed_from_ports": im.throughput.computed_from_ports,
+                "high_value": im.throughput.high_value,
+            }
+        if im.latency:
+            for (s, d), e in im.latency.entries.items():
+                rec["latency"][f"{s}->{d}"] = {
+                    "cycles": e.value, "kind": e.kind,
+                    "same_reg": e.same_reg, "high": e.high_value,
+                }
+        out["instructions"][name] = rec
+    return json.dumps(out, indent=1)

@@ -1,0 +1,80 @@
+"""Port-usage inference — Algorithm 1 of the paper (§5.1.2).
+
+Measuring an instruction in isolation is ambiguous (2*p05 measures the same
+as 1*p0+1*p5). The algorithm disambiguates by co-scheduling the instruction
+with ``blockRep`` copies of a blocking instruction for each port combination
+pc (processed smallest-first): μops of the instruction observed *on the
+blocked ports* can run nowhere else; μops attributed to strict subsets pc'
+in earlier iterations are subtracted (line 10 of Algorithm 1).
+
+Includes both optimizations from the paper: iterate only over combinations
+intersecting the isolation-measurement ports, and exit early once the
+attributed μop count reaches the instruction's total μop count.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.blocking import BlockingSet
+from repro.core.isa import ISA, InstrSpec
+from repro.core.machine import (RegPool, fresh_instance, isolation_ports,
+                                measure, total_uops)
+
+
+@dataclass
+class PortUsage:
+    """pu: port combination -> μop count, plus bookkeeping."""
+    usage: dict = field(default_factory=dict)  # frozenset -> int
+    total_uops: float = 0.0
+    isolation: dict = field(default_factory=dict)
+
+    def notation(self) -> str:
+        """The paper's 3*p015+1*p23 notation."""
+        parts = [f"{n}*p{''.join(sorted(pc))}"
+                 for pc, n in sorted(self.usage.items(),
+                                     key=lambda kv: sorted(kv[0]))]
+        return "+".join(parts) if parts else "0"
+
+
+def infer_port_usage(machine, isa: ISA, instr: InstrSpec | str,
+                     blocking: BlockingSet, max_latency: int,
+                     block_rep_cap: int = 64) -> PortUsage:
+    """Algorithm 1. ``max_latency``: max over the instruction's latency
+    pairs (§5.2), used to size blockRep = 8 * maxLatency."""
+    spec = isa[instr] if isinstance(instr, str) else instr
+    pool = RegPool()
+    result = PortUsage()
+    result.total_uops = round(total_uops(machine, spec), 2)
+    result.isolation = isolation_ports(machine, spec)
+    iso_ports = set(result.isolation)
+
+    # optimization 1: only combinations whose ports appear in isolation
+    combos = [pc for pc in blocking.combos() if pc & iso_ports]
+    combos.sort(key=lambda pc: (len(pc), sorted(pc)))
+
+    n_ports = len(machine.ports)
+    block_rep = min(max(8 * max_latency, n_ports), block_rep_cap)
+
+    attributed = 0
+    for pc in combos:
+        blk_spec = isa[blocking.instrs[pc]]
+        # the analyzed instruction's registers, kept apart from blockers'
+        target = fresh_instance(spec, pool)
+        avoid = set(target.regs.values())
+        code = [fresh_instance(blk_spec, pool, avoid)
+                for _ in range(block_rep)]
+        code.append(target)
+        c = measure(machine, code)
+        uops = sum(c.port_uops.get(p, 0.0) for p in pc)
+        uops -= block_rep * blocking.uops_on_pc[pc]           # line 7
+        for pc2, u2 in result.usage.items():                  # line 8-10
+            if pc2 < pc:
+                uops -= u2
+        uops_i = round(uops)
+        if uops_i > 0:
+            result.usage[pc] = uops_i
+            attributed += uops_i
+        # optimization 2: early exit
+        if attributed >= round(result.total_uops):
+            break
+    return result

@@ -1,0 +1,81 @@
+"""Deterministic, shard-aware synthetic data pipeline.
+
+Produces next-token-prediction batches from a synthetic corpus (a seeded
+Markov-ish token stream with local structure, so small models actually have
+something learnable). Properties a production loader must have:
+
+  * deterministic given (seed, step) — restart-safe without state files,
+  * shard-aware: each data shard draws a disjoint slice of the global batch,
+  * O(1) state: the cursor IS the step number (checkpointable as one int),
+  * modality stubs for the VLM / audio architectures per the assignment.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    vocab_size: int = 512
+    # synthetic structure: tok_{t+1} = (a * tok_t + drift_{block}) % V
+    n_styles: int = 7
+
+
+class SyntheticTokens:
+    """Iterable over (step -> batch dict). Stateless between calls."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeSpec,
+                 data_cfg: DataConfig | None = None,
+                 shard_index: int = 0, num_shards: int = 1):
+        self.cfg = cfg
+        self.shape = shape
+        self.dc = data_cfg or DataConfig(vocab_size=cfg.vocab_size)
+        assert shape.global_batch % num_shards == 0
+        self.local_batch = shape.global_batch // num_shards
+        self.shard_index = shard_index
+        self.num_shards = num_shards
+
+    def batch_at(self, step: int) -> dict:
+        """Global determinism: sequence i of step s is a pure function of
+        (seed, s, global_index)."""
+        cfg, dc = self.cfg, self.dc
+        B, S = self.local_batch, self.shape.seq_len
+        g0 = step * self.shape.global_batch + self.shard_index * B
+        idx = np.arange(g0, g0 + B, dtype=np.uint64)
+        V = min(dc.vocab_size, cfg.vocab_size)
+        # deterministic integer hashing: sequence i is a pure fn of (seed, i)
+        h = (idx * np.uint64(2654435761) + np.uint64(dc.seed * 97 + 13))
+        h ^= h >> np.uint64(16)
+        style = (h % np.uint64(dc.n_styles)).astype(np.int64)[:, None] + 1
+        start = ((h >> np.uint64(8)) % np.uint64(V)).astype(np.int64)[:, None]
+        t = np.arange(S + 1, dtype=np.int64)[None, :]
+        toks = (start + style * t + (t // 17) * (style + 3)) % V
+        tokens = toks[:, :-1].astype(np.int32)
+        labels = toks[:, 1:].astype(np.int32)
+        batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+        if cfg.family == "vlm":
+            pt = cfg.num_patch_tokens
+            key = jax.random.PRNGKey(dc.seed * 1000003 + step)
+            batch["patch_embeds"] = (jax.random.normal(
+                key, (B, pt, cfg.d_model)) * 0.02).astype(cfg.compute_dtype)
+            batch["tokens"] = batch["tokens"][:, :S - pt]
+            batch["labels"] = batch["labels"][:, :S - pt]
+        elif cfg.family == "encdec":
+            key = jax.random.PRNGKey(dc.seed * 1000003 + step)
+            batch["audio_frames"] = (jax.random.normal(
+                key, (B, cfg.num_audio_frames, cfg.d_model)) * 0.02
+            ).astype(cfg.compute_dtype)
+        return batch
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

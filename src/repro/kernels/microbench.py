@@ -1,0 +1,112 @@
+"""Unit-blocking microbenchmark kernels — the TPU-native incarnation of the
+paper's *blocking instructions* (§5.1.1).
+
+On x86 a blocking instruction saturates one execution-port combination. The
+TPU analogue is a Pallas kernel that saturates one functional-unit class:
+
+    mxu_blocker   back-to-back 128×128 matmuls            -> MXU
+    vpu_blocker   long elementwise FMA chains             -> VPU
+    sfu_blocker   transcendental chains (exp/rsqrt)       -> VPU-transcendental
+    lsu_blocker   streaming copy with trivial compute     -> LSU (HBM DMA)
+
+``core/kernel_bench.py`` co-schedules a target kernel with each blocker and
+attributes unit occupancy from the contention signature (the counter-free
+variant of Algorithm 1: t(A‖B) ≈ max vs ≈ sum).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128
+
+
+def _mxu_kernel(a_ref, b_ref, o_ref, *, iters: int):
+    a = a_ref[...]
+    b = b_ref[...]
+
+    def body(_, acc):
+        return jax.lax.dot_general(acc, b, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+    o_ref[...] = jax.lax.fori_loop(0, iters, body, a)
+
+
+def mxu_blocker(iters: int = 64, tile: int = TILE, *, interpret: bool = False):
+    a = jnp.eye(tile, dtype=jnp.float32) * 1.0001
+    return pl.pallas_call(
+        functools.partial(_mxu_kernel, iters=iters),
+        in_specs=[pl.BlockSpec((tile, tile), lambda: (0, 0))] * 2,
+        out_specs=pl.BlockSpec((tile, tile), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((tile, tile), jnp.float32),
+        interpret=interpret,
+    )(a, a)
+
+
+def _vpu_kernel(x_ref, o_ref, *, iters: int):
+    x = x_ref[...]
+
+    def body(_, acc):
+        return acc * 1.000001 + 0.5
+
+    o_ref[...] = jax.lax.fori_loop(0, iters, body, x)
+
+
+def vpu_blocker(iters: int = 256, rows: int = 8, *, interpret: bool = False):
+    x = jnp.ones((rows, TILE), jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_vpu_kernel, iters=iters),
+        in_specs=[pl.BlockSpec((rows, TILE), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((rows, TILE), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, TILE), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+def _sfu_kernel(x_ref, o_ref, *, iters: int):
+    x = x_ref[...]
+
+    def body(_, acc):
+        return jax.lax.rsqrt(acc + 1.5)
+
+    o_ref[...] = jax.lax.fori_loop(0, iters, body, x)
+
+
+def sfu_blocker(iters: int = 128, rows: int = 8, *, interpret: bool = False):
+    x = jnp.ones((rows, TILE), jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_sfu_kernel, iters=iters),
+        in_specs=[pl.BlockSpec((rows, TILE), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((rows, TILE), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, TILE), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+def _lsu_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + 1.0
+
+
+def lsu_blocker(rows: int = 4096, *, interpret: bool = False):
+    """Streaming copy: bandwidth-bound, near-zero arithmetic intensity."""
+    x = jnp.zeros((rows, TILE), jnp.float32)
+    br = min(512, rows)
+    return pl.pallas_call(
+        _lsu_kernel,
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, TILE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, TILE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, TILE), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+BLOCKERS = {
+    "MXU": mxu_blocker,
+    "VPU": vpu_blocker,
+    "SFU": sfu_blocker,
+    "LSU": lsu_blocker,
+}

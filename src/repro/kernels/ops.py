@@ -1,0 +1,56 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (Mosaic only lowers for real TPUs) and
+False on TPU — the switch the model stack uses when ``cfg.attn_impl ==
+"pallas"``. Flash attention gets a custom VJP whose backward pass is the
+chunked XLA recomputation (fused forward + XLA backward is a standard
+production pattern; a fused Pallas backward is a further optimization).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm_kernel
+from repro.kernels.ssd_scan import ssd_scan as _ssd_kernel
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    return flash_attention_fwd(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k,
+                               interpret=default_interpret())
+
+
+def _fa_fwd(q, k, v, causal, block_q, block_k):
+    o = flash_attention(q, k, v, causal, block_q, block_k)
+    return o, (q, k, v)
+
+
+def _fa_bwd(causal, block_q, block_k, res, g):
+    q, k, v = res
+    # XLA-recomputed backward through the reference (flash-equivalent math)
+    _, vjp = jax.vjp(lambda q_, k_, v_:
+                     ref.reference_attention(q_, k_, v_, causal=causal),
+                     q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int = 256):
+    return _ssd_kernel(x, dt, A, B, C, chunk, interpret=default_interpret())
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    return _rmsnorm_kernel(x, w, eps, interpret=default_interpret())

@@ -1,0 +1,110 @@
+"""Training driver: data pipeline → jitted train step → checkpoints →
+fault-tolerance hooks. Works on a single CPU device (smoke configs) and on
+the production mesh unchanged (mesh/axes are injected).
+
+CLI (examples/train_100m.py wraps this):
+    PYTHONPATH=src python -m repro.launch.train --arch smollm_360m \
+        --smoke --steps 200 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.configs.base import ShapeSpec, load_config
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models import model as MF
+from repro.models.sharding import SINGLE
+from repro.optim import adamw
+from repro.runtime.fault_tolerance import StepTimer, StragglerDetector
+from repro.train.train_loop import make_train_step
+
+
+def train(cfg, shape: ShapeSpec, *, steps: int, opt_cfg=None, mesh=None,
+          ckpt_dir=None, ckpt_interval: int = 100, microbatches: int = 1,
+          log_every: int = 10, resume: bool = True, seed: int = 0,
+          log_fn=print):
+    opt_cfg = opt_cfg or adamw.AdamWConfig(total_steps=steps)
+    axes = MF.axes_for(cfg, shape, mesh) if mesh is not None else SINGLE
+    model = MF.build_model(cfg, axes, mesh)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = adamw.init_state(params)
+    step_fn = make_train_step(model, opt_cfg, microbatches)
+    if mesh is not None:
+        p_sh = MF.to_shardings(mesh, MF.param_pspecs(params, cfg))
+        o_sh = adamw.AdamWState(
+            MF.to_shardings(mesh, jax.sharding.PartitionSpec()),
+            MF.to_shardings(mesh, MF.param_pspecs(opt_state.mu, cfg)),
+            MF.to_shardings(mesh, MF.param_pspecs(opt_state.nu, cfg)))
+        params = jax.device_put(params, p_sh)
+        opt_state = jax.device_put(opt_state, o_sh)
+        step_fn = jax.jit(step_fn, in_shardings=(p_sh, o_sh, None),
+                          donate_argnums=(0, 1))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    data = SyntheticTokens(cfg, shape, DataConfig(
+        seed=seed, vocab_size=min(cfg.vocab_size, 512)))
+    mgr = None
+    start_step = 0
+    if ckpt_dir is not None:
+        mgr = CheckpointManager(ckpt_dir, interval=ckpt_interval)
+        if resume:
+            got = mgr.restore_latest((params, opt_state))
+            if got is not None:
+                start_step, (params, opt_state), _ = got
+                log_fn(f"[train] resumed from step {start_step}")
+
+    detector = StragglerDetector()
+    losses = []
+    for step in range(start_step, steps):
+        batch = data.batch_at(step)
+        with StepTimer(detector):
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if (step + 1) % log_every == 0 or step == steps - 1:
+            loss = float(metrics["loss"])
+            losses.append((step + 1, loss))
+            gn = float(metrics.get("grad_norm", np.nan))
+            log_fn(f"[train] step {step + 1}/{steps} loss={loss:.4f} "
+                   f"gnorm={gn:.3f} ewma={detector.median():.3f}s")
+        if mgr is not None:
+            mgr.maybe_save(step + 1, (params, opt_state),
+                           metadata={"arch": cfg.name})
+    if mgr is not None:
+        mgr.maybe_save(steps, (params, opt_state), force=True,
+                       metadata={"arch": cfg.name})
+        mgr.wait()
+    return params, opt_state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_360m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    cfg = load_config(args.arch, smoke=args.smoke)
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    t0 = time.time()
+    _, _, losses = train(
+        cfg, shape, steps=args.steps,
+        opt_cfg=adamw.AdamWConfig(lr=args.lr, warmup_steps=20,
+                                  total_steps=args.steps),
+        ckpt_dir=args.ckpt_dir, microbatches=args.microbatches)
+    print(f"[train] done in {time.time() - t0:.1f}s; "
+          f"loss {losses[0][1]:.3f} -> {losses[-1][1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,347 @@
+"""Core neural-net layers in pure JAX (no flax): norms, RoPE/M-RoPE,
+GQA attention (train/prefill chunked + single-step decode), MLPs.
+
+Conventions:
+  * params are plain nested dicts of jnp arrays,
+  * every function takes ``axes: MeshAxes`` and applies activation sharding
+    constraints through :func:`repro.models.sharding.sc`,
+  * compute happens in ``cfg.compute_dtype`` (bf16), softmax/norm statistics
+    in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import MeshAxes, sc
+
+def xscan(cfg: ModelConfig, body, carry, xs, length=None):
+    """lax.scan honoring cfg.unroll_scans (see ModelConfig docstring)."""
+    return jax.lax.scan(body, carry, xs, length=length,
+                        unroll=True if cfg.unroll_scans else 1)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, shape, in_axis: int = -2, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    return (jax.random.normal(rng, shape) * (fan_in**-0.5)).astype(dtype)
+
+
+def embed_init(rng, shape, dtype=jnp.float32):
+    return (jax.random.normal(rng, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    """RMSNorm with fp32 *statistics* but a bf16 data path.
+
+    The obvious form ``(x32 * rsqrt(var)).astype(bf16)`` materializes an
+    fp32 (B, S, D) intermediate whose backward cotangent is fp32 — measured
+    on minitron train_4k this doubles the TP gradient all-reduce wire bytes
+    (§Perf cell 2). Keeping only the (B, S, 1) statistic in fp32 keeps the
+    residual-stream cotangents in bf16."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(dt)  # (B, S, 1) statistic only
+    return x * inv * w.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions, head_dim: int, theta: float, sections=()):
+    """Rotation angles, shape (..., S, head_dim//2).
+
+    ``positions``: (B, S) int32 for plain RoPE, or (3, B, S) for M-RoPE where
+    the three streams are (temporal, height, width) position ids. ``sections``
+    partitions head_dim//2 among the three streams (Qwen2-VL).
+    """
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    if sections:
+        assert sum(sections) == half and positions.ndim == 3
+        sec_id = jnp.repeat(
+            jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=half
+        )  # (half,) -> which position stream each freq uses
+        pos = positions.astype(jnp.float32)[sec_id]  # (half, B, S)
+        return jnp.moveaxis(pos, 0, -1) * inv_freq  # (B, S, half)
+    return positions.astype(jnp.float32)[..., None] * inv_freq
+
+
+def apply_rope(x, angles):
+    """x: (B, S, H, Dh); angles: (B, S, Dh//2). Rotate-half convention."""
+    half = x.shape[-1] // 2
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attn_params(rng, cfg: ModelConfig, layers: int | None = None, dtype=None):
+    """Stacked attention params; ``layers=None`` -> unstacked (shared block)."""
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    pre = () if layers is None else (layers,)
+    ks = jax.random.split(rng, 5)
+    dtype = dtype or cfg.param_dtype
+    p = {
+        "wq": dense_init(ks[0], (*pre, d, qd), dtype=dtype),
+        "wk": dense_init(ks[1], (*pre, d, kvd), dtype=dtype),
+        "wv": dense_init(ks[2], (*pre, d, kvd), dtype=dtype),
+        "wo": dense_init(ks[3], (*pre, qd, d), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((*pre, cfg.head_dim), dtype)
+        p["k_norm"] = jnp.ones((*pre, cfg.head_dim), dtype)
+    return p
+
+
+def project_qkv(x, p, cfg: ModelConfig, axes: MeshAxes, angles, kv_x=None):
+    """Project to q/k/v heads, apply qk-norm and RoPE.
+
+    ``kv_x``: source for k/v (cross-attention; no RoPE applied then);
+    defaults to ``x``. Returns q (B,Sq,Hq,Dh), k,v (B,Skv,Hkv,Dh).
+    """
+    cd = cfg.compute_dtype
+    cross = kv_x is not None
+    kv_x = x if kv_x is None else kv_x
+    B, Sq, _ = x.shape
+    Skv = kv_x.shape[1]
+    q = (x @ p["wq"].astype(cd)).reshape(B, Sq, cfg.num_heads, cfg.head_dim)
+    k = (kv_x @ p["wk"].astype(cd)).reshape(B, Skv, cfg.num_kv_heads, cfg.head_dim)
+    v = (kv_x @ p["wv"].astype(cd)).reshape(B, Skv, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if angles is not None and not cross:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    q = sc(q, axes, "batch", None, "model", None)
+    k = sc(k, axes, "batch", None, None, None)
+    v = sc(v, axes, "batch", None, None, None)
+    return q, k, v
+
+
+def _repeat_kv(k, num_heads: int):
+    """(B,S,Hkv,Dh) -> (B,S,Hq,Dh) by repeating each kv head for its group."""
+    return jnp.repeat(k, num_heads // k.shape[2], axis=2)
+
+
+def full_attention(q, k, v, cfg: ModelConfig, axes: MeshAxes, *, causal: bool,
+                   q_chunk: int | None = None):
+    """Chunked-query full attention (flash-style blocking at the HLO level).
+
+    Scanning over query chunks bounds peak score memory at
+    (B, H, q_chunk, Skv) instead of (B, H, Sq, Skv) — required for 32k
+    prefill, where unchunked scores would be ~17 GB/device.
+    """
+    B, Sq, Hq, Dh = q.shape
+    Skv = k.shape[1]
+    k = _repeat_kv(k, Hq)
+    v = _repeat_kv(v, Hq)
+    k = sc(k, axes, "batch", None, "model", None)
+    v = sc(v, axes, "batch", None, "model", None)
+    scale = Dh**-0.5
+    qc = min(q_chunk or cfg.attn_q_chunk, Sq)
+    n_chunks = Sq // qc
+    k_idx = jnp.arange(Skv)
+
+    def one_chunk(qb, q0):
+        s = jnp.einsum("bqhd,bkhd->bhqk", qb, k) * scale
+        s = sc(s, axes, "batch", "model", None, None)
+        if causal:
+            q_idx = q0 + jnp.arange(qc)
+            mask = q_idx[:, None] >= k_idx[None, :]
+            s = jnp.where(mask[None, None], s, -jnp.inf)
+        a = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(qb.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", a, v)
+        return sc(o, axes, "batch", None, "model", None)
+
+    if n_chunks <= 1:
+        out = one_chunk(q, jnp.int32(0))
+    else:
+        qr = q.reshape(B, n_chunks, qc, Hq, Dh)
+
+        def body(_, inp):
+            qb, c = inp  # qb: (B, qc, Hq, Dh)
+            return None, one_chunk(qb, c * qc)
+
+        _, out = xscan(
+            cfg, body, None, (jnp.moveaxis(qr, 1, 0), jnp.arange(n_chunks))
+        )  # out: (n_chunks, B, qc, Hq, Dh)
+        out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, Hq, Dh)
+    return out.reshape(B, Sq, Hq * Dh)
+
+
+def decode_attention(q, k_cache, v_cache, pos, cfg: ModelConfig, axes: MeshAxes):
+    """Single-token attention against a (possibly seq-sharded) KV cache.
+
+    q: (B, 1, Hq, Dh); caches: (B, Smax, Hkv, Dh); ``pos``: scalar int32 —
+    number of valid cache entries (positions >= pos are masked out).
+
+    When ``axes.kv_partition == "seq"`` the cache's sequence dim is sharded
+    over the model axis (flash-decoding); the softmax statistics and the
+    weighted sum then reduce over the model axis (GSPMD inserts the
+    all-reduces). Otherwise kv-heads are sharded and attention is local.
+    """
+    B, _, Hq, Dh = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    if axes.kv_partition == "seq":
+        cache_spec = ("batch", "model", None, None)
+    else:
+        cache_spec = ("batch", None, "model", None)
+    k_cache = sc(k_cache, axes, *cache_spec)
+    v_cache = sc(v_cache, axes, *cache_spec)
+    group = Hq // Hkv
+    # grouped form: avoid materializing a repeated (B,Smax,Hq,Dh) cache
+    qg = q.reshape(B, Hkv, group, Dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache) * (Dh**-0.5)
+    valid = (jnp.arange(Smax) < pos)[None, None, None, :]
+    s = jnp.where(valid, s.astype(jnp.float32), -jnp.inf)
+    if axes.kv_partition == "seq":
+        s = sc(s, axes, "batch", None, None, "model")
+    a = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhgk,bkhd->bhgd", a, v_cache)
+    return o.reshape(B, 1, Hq * Dh)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(rng, cfg: ModelConfig, layers: int | None = None, dtype=None):
+    d, f = cfg.d_model, cfg.d_ff
+    pre = () if layers is None else (layers,)
+    ks = jax.random.split(rng, 3)
+    dtype = dtype or cfg.param_dtype
+    if cfg.mlp_kind == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (*pre, d, f), dtype=dtype),
+            "w_up": dense_init(ks[1], (*pre, d, f), dtype=dtype),
+            "w_down": dense_init(ks[2], (*pre, f, d), dtype=dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], (*pre, d, f), dtype=dtype),
+        "w_down": dense_init(ks[1], (*pre, f, d), dtype=dtype),
+    }
+
+
+def _ar_boundary(x, cfg: ModelConfig):
+    """Optional optimization barrier after TP matmuls: keeps the model-axis
+    all-reduce in bf16 (XLA otherwise promotes it to fp32 when a downstream
+    consumer upcasts — measured 2x collective wire; see EXPERIMENTS §Perf)."""
+    if cfg.bf16_all_reduce:
+        return jax.lax.optimization_barrier(x)
+    return x
+
+
+def _tp_out(x, name: str):
+    """Tag the TP-psum outputs for the 'tp_out' remat policy: saving these
+    two (B,S,D) tensors per layer lets the rematerialized backward skip
+    re-running the forward model-axis all-reduces (-1/3 AR wire)."""
+    from jax.ad_checkpoint import checkpoint_name  # noqa: PLC0415
+    return checkpoint_name(x, name)
+
+
+def mlp_block(x, p, cfg: ModelConfig, axes: MeshAxes):
+    cd = cfg.compute_dtype
+    if cfg.mlp_kind == "swiglu":
+        g = x @ p["w_gate"].astype(cd)
+        u = x @ p["w_up"].astype(cd)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(x @ p["w_up"].astype(cd))
+    h = sc(h, axes, "batch", None, "model")
+    out = _tp_out(_ar_boundary(h @ p["w_down"].astype(cd), cfg), "mlp_out")
+    return sc(out, axes, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# transformer block (attention + MLP, pre-norm)
+# ---------------------------------------------------------------------------
+
+
+def block_params(rng, cfg: ModelConfig, layers: int | None = None):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    pre = () if layers is None else (layers,)
+    return {
+        "attn": attn_params(k1, cfg, layers),
+        "mlp": mlp_params(k2, cfg, layers),
+        "ln1": jnp.ones((*pre, cfg.d_model), cfg.param_dtype),
+        "ln2": jnp.ones((*pre, cfg.d_model), cfg.param_dtype),
+    }
+
+
+def transformer_block(x, p, cfg: ModelConfig, axes: MeshAxes, angles, *,
+                      causal: bool = True):
+    """Pre-norm self-attention + MLP residual block (training / prefill)."""
+    cd = cfg.compute_dtype
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = project_qkv(h, p["attn"], cfg, axes, angles)
+    o = full_attention(q, k, v, cfg, axes, causal=causal)
+    x = x + _tp_out(_ar_boundary(o @ p["attn"]["wo"].astype(cd), cfg),
+                    "attn_out")
+    x = sc(x, axes, "batch", None, None)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + mlp_block(h, p["mlp"], cfg, axes)
+    return sc(x, axes, "batch", None, None)
+
+
+def cross_attn_sublock(x, p, ln, cfg: ModelConfig, axes: MeshAxes, enc_out):
+    """Pre-norm cross-attention residual sub-block (enc-dec training path).
+
+    ``p``: attention params; ``ln``: the norm weight; no RoPE on cross-attn.
+    """
+    cd = cfg.compute_dtype
+    h = rms_norm(x, ln, cfg.norm_eps)
+    q, k, v = project_qkv(h, p, cfg, axes, None, kv_x=enc_out)
+    o = full_attention(q, k, v, cfg, axes, causal=False)
+    return x + (o @ p["wo"].astype(cd))
+
+
+def transformer_block_decode(x, p, cfg: ModelConfig, axes: MeshAxes, angles,
+                             cache, pos):
+    """Single-token decode block. ``cache``: {"k","v"} (B,Smax,Hkv,Dh).
+
+    Writes this step's k/v at position ``pos`` then attends to positions
+    ``< pos+1``. Returns (x, updated cache).
+    """
+    cd = cfg.compute_dtype
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = project_qkv(h, p["attn"], cfg, axes, angles)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    o = decode_attention(q, ck, cv, pos + 1, cfg, axes)
+    x = x + (o @ p["attn"]["wo"].astype(cd))
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + mlp_block(h, p["mlp"], cfg, axes)
+    return x, {"k": ck, "v": cv}
+
+
+def cross_block_decode(x, p, cfg: ModelConfig, axes: MeshAxes, enc_kv):
+    """Cross-attention sub-block for enc-dec decode (k/v precomputed)."""
+    cd = cfg.compute_dtype
+    B = x.shape[0]
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = (h @ p["attn"]["wq"].astype(cd)).reshape(B, 1, cfg.num_heads, cfg.head_dim)
+    S_enc = enc_kv["k"].shape[1]
+    o = decode_attention(q, enc_kv["k"].astype(cd), enc_kv["v"].astype(cd),
+                         jnp.int32(S_enc), cfg, axes)
+    return x + (o @ p["attn"]["wo"].astype(cd))

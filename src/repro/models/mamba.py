@@ -1,0 +1,239 @@
+"""Mamba2 (SSD — state-space duality) blocks in pure JAX [arXiv:2405.21060].
+
+Implements the chunked SSD algorithm (matrix-transformer form within chunks,
+linear recurrence across chunks) for training/prefill, and the O(1)-per-token
+recurrent step for decode. The projection is split into separate matrices per
+component (z, x, B, C, dt) so each shards cleanly over the model axis.
+
+``kernels/ssd_scan.py`` provides the Pallas TPU kernel for the intra-chunk
+part; this module is the XLA path used for dry-runs and the reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+from repro.models.sharding import MeshAxes, sc
+
+
+def segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k] (i>=j),
+    -inf elsewhere. x: (..., T) -> (..., T, T)."""
+    T = x.shape[-1]
+    xc = jnp.cumsum(x, axis=-1)
+    seg = xc[..., :, None] - xc[..., None, :]
+    i = jnp.arange(T)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    x: (b, s, h, p)   head inputs
+    dt: (b, s, h)     discretization steps (post-softplus)
+    A: (h,)           negative decay rates
+    B, C: (b, s, g, n) input/output projections (g groups broadcast to heads)
+    Returns y: (b, s, h, p), final_state: (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:  # zero-pad tail: dt=0 => decay 1 and no state contribution
+        zp = lambda a: jnp.pad(a, [(0, 0), (0, pad)] +
+                               [(0, 0)] * (a.ndim - 2))
+        x, dt, B, C = zp(x), zp(dt), zp(B), zp(C)
+        s_orig, s = s, s + pad
+    else:
+        s_orig = s
+    c = s // q
+
+    xd = (x * dt[..., None]).reshape(b, c, q, h, p)
+    dA = (dt * A).reshape(b, c, q, h)
+    rep = h // g
+    Bh = jnp.repeat(B.reshape(b, c, q, g, n), rep, axis=3)  # (b,c,q,h,n)
+    Ch = jnp.repeat(C.reshape(b, c, q, g, n), rep, axis=3)
+
+    dA_t = jnp.moveaxis(dA, -1, 1)  # (b, h, c, q)
+    dA_cs = jnp.cumsum(dA_t, axis=-1)  # (b, h, c, q)
+
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(segsum(dA_t))  # (b, h, c, q, q)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", Ch, Bh, L, xd)
+
+    # 2. per-chunk final states
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)  # (b, h, c, q)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", Bh, decay_states, xd)
+
+    # 3. inter-chunk linear recurrence (sequential scan; c is small)
+    chunk_decay = jnp.exp(dA_cs[..., -1])  # (b, h, c)
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), states.dtype)
+
+    def step(carry, inp):
+        st_c, dec_c = inp  # (b,h,p,n), (b,h)
+        new = carry * dec_c[..., None, None] + st_c
+        return new, carry  # emit state *entering* this chunk
+
+    final_state, states_in = jax.lax.scan(
+        step, initial_state,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, -1, 0)))
+    states_in = jnp.moveaxis(states_in, 0, 1)  # (b, c, h, p, n)
+
+    # 4. state -> output
+    state_decay = jnp.exp(dA_cs)  # (b, h, c, q)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Ch, states_in, state_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)[:, :s_orig]
+    return y, final_state
+
+
+def ssd_step(state, x_t, dt_t, A, B_t, C_t):
+    """Single-token SSD recurrence.
+
+    state: (b, h, p, n); x_t: (b, h, p); dt_t: (b, h); B_t, C_t: (b, g, n).
+    Returns (y_t: (b, h, p), new_state).
+    """
+    h, g = x_t.shape[1], B_t.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B_t, rep, axis=1)  # (b, h, n)
+    Ch = jnp.repeat(C_t, rep, axis=1)
+    dA = jnp.exp(dt_t * A)  # (b, h)
+    upd = jnp.einsum("bhp,bhn->bhpn", x_t * dt_t[..., None], Bh)
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba_params(rng, cfg: ModelConfig, layers: int | None = None):
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h, w = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    pre = () if layers is None else (layers,)
+    ks = jax.random.split(rng, 8)
+    dt = cfg.param_dtype
+    return {
+        "wz": dense_init(ks[0], (*pre, d, di), dtype=dt),
+        "wx": dense_init(ks[1], (*pre, d, di), dtype=dt),
+        "wB": dense_init(ks[2], (*pre, d, g * n), dtype=dt),
+        "wC": dense_init(ks[3], (*pre, d, g * n), dtype=dt),
+        "wdt": dense_init(ks[4], (*pre, d, h), dtype=dt),
+        "conv": (jax.random.normal(ks[5], (*pre, w, di + 2 * g * n)) * 0.1).astype(dt),
+        "A_log": jnp.zeros((*pre, h), dt),  # A = -exp(A_log) = -1
+        "D": jnp.ones((*pre, h), dt),
+        "dt_bias": jnp.full((*pre, h), -2.0, dt),  # softplus(-2) ~ 0.12
+        "norm": jnp.ones((*pre, di), dt),
+        "out": dense_init(ks[6], (*pre, di, d), dtype=dt),
+        "ln": jnp.ones((*pre, d), dt),
+    }
+
+
+def causal_conv1d(x, kernel):
+    """Depthwise causal conv. x: (B, S, ch); kernel: (w, ch)."""
+    w = kernel.shape[0]
+    pad = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    S = x.shape[1]
+    out = jnp.zeros_like(x)
+    for i in range(w):
+        out = out + pad[:, i:i + S, :] * kernel[i]
+    return out
+
+
+def _project(x, p, cfg: ModelConfig, axes: MeshAxes):
+    cd = cfg.compute_dtype
+    z = x @ p["wz"].astype(cd)
+    xin = x @ p["wx"].astype(cd)
+    Bp = x @ p["wB"].astype(cd)
+    Cp = x @ p["wC"].astype(cd)
+    dt_raw = x @ p["wdt"].astype(cd)
+    return z, xin, Bp, Cp, dt_raw
+
+
+def mamba_block(x, p, cfg: ModelConfig, axes: MeshAxes):
+    """Training/prefill Mamba2 block: (B, S, D) -> ((B, S, D), final_state).
+
+    final_state: (ssm_state (B,h,p,n), conv_state (B, w-1, conv_ch)) so that
+    prefill can hand off to the recurrent decode path.
+    """
+    B_, S, _ = x.shape
+    cd = cfg.compute_dtype
+    g, n, hh, pp, w = (cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads,
+                       cfg.ssm_headdim, cfg.ssm_conv)
+    res = x
+    x = rms_norm(x, p["ln"], cfg.norm_eps)
+    z, xin, Bp, Cp, dt_raw = _project(x, p, cfg, axes)
+    xbc = jnp.concatenate([xin, Bp, Cp], axis=-1)
+    xbc = sc(xbc, axes, "batch", None, "model")
+    conv_state = xbc[:, S - (w - 1):, :] if S >= w else None
+    xbc = jax.nn.silu(causal_conv1d(xbc, p["conv"].astype(cd)))
+    di = cfg.d_inner
+    xin = xbc[..., :di].reshape(B_, S, hh, pp)
+    Bm = xbc[..., di:di + g * n].reshape(B_, S, g, n)
+    Cm = xbc[..., di + g * n:].reshape(B_, S, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xin = sc(xin, axes, "batch", None, "model", None)
+    # ssd_dtype="bf16": keep x/B/C operands in bf16 through the intra-chunk
+    # matrix work (MXU-native); decay/statistics stay fp32 inside ssd_chunked
+    sdt = jnp.float32 if cfg.ssd_dtype == "fp32" else cfg.compute_dtype
+    y, ssm_state = ssd_chunked(xin.astype(sdt), dt, A,
+                               Bm.astype(sdt), Cm.astype(sdt),
+                               cfg.ssm_chunk)
+    y = y.astype(jnp.float32) + (p["D"].astype(jnp.float32)[:, None]
+                                 * xin.astype(jnp.float32))
+    y = y.astype(cd).reshape(B_, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out"].astype(cd)
+    return res + sc(out, axes, "batch", None, None), (ssm_state.astype(cd), conv_state)
+
+
+def mamba_block_decode(x, p, cfg: ModelConfig, axes: MeshAxes, state):
+    """Single-token Mamba2 step. x: (B, 1, D); state: (ssm, conv)."""
+    ssm_state, conv_state = state  # (B,h,p,n), (B, w-1, conv_ch)
+    B_, _, _ = x.shape
+    cd = cfg.compute_dtype
+    g, n, hh, pp, w = (cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads,
+                       cfg.ssm_headdim, cfg.ssm_conv)
+    res = x
+    x = rms_norm(x, p["ln"], cfg.norm_eps)
+    z, xin, Bp, Cp, dt_raw = _project(x[:, 0], p, cfg, axes)
+    xbc_t = jnp.concatenate([xin, Bp, Cp], axis=-1)  # (B, conv_ch)
+    window = jnp.concatenate([conv_state, xbc_t[:, None, :]], axis=1)  # (B,w,ch)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv"].astype(cd))
+    conv_out = jax.nn.silu(conv_out)
+    new_conv_state = window[:, 1:, :]
+    di = cfg.d_inner
+    x_t = conv_out[:, :di].reshape(B_, hh, pp)
+    B_t = conv_out[:, di:di + g * n].reshape(B_, g, n)
+    C_t = conv_out[:, di + g * n:].reshape(B_, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, new_ssm = ssd_step(ssm_state.astype(jnp.float32),
+                          x_t.astype(jnp.float32), dt, A,
+                          B_t.astype(jnp.float32), C_t.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32) [:, None] * x_t.astype(jnp.float32)
+    y = y.astype(cd).reshape(B_, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["out"].astype(cd))[:, None, :]
+    return res + out, (new_ssm.astype(cd), new_conv_state)
+
+
+def mamba_state_specs(cfg: ModelConfig, batch: int, stacked: int | None = None):
+    """ShapeDtypeStructs for decode state of one (or ``stacked``) blocks."""
+    pre = () if stacked is None else (stacked,)
+    cd = cfg.compute_dtype
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return (
+        jax.ShapeDtypeStruct((*pre, batch, cfg.ssm_heads, cfg.ssm_headdim,
+                              cfg.ssm_state), cd),
+        jax.ShapeDtypeStruct((*pre, batch, cfg.ssm_conv - 1, conv_ch), cd),
+    )

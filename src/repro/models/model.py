@@ -1,0 +1,196 @@
+"""Facade: build models, input specs (ShapeDtypeStructs) and sharding rules.
+
+This is the single place that knows how parameter/state/input pytrees map to
+PartitionSpecs (DESIGN.md §6). Rules are name-based on the *trailing* dims of
+each leaf so the same table covers stacked (L, ...), double-stacked
+(n_super, k, ...) and unstacked (shared-block) parameters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.sharding import MeshAxes, make_axes
+from repro.models.transformer import build_model  # re-export  # noqa: F401
+
+# trailing-dim partition entries per parameter name ("data" = ZeRO-3 shard,
+# "model" = tensor/expert parallel). Leading stack dims are padded with None.
+_PARAM_RULES = {
+    "embed": ("model", "data"),
+    "unembed": ("model", "data"),
+    "wq": ("data", "model"),
+    "wk": ("data", "model"),
+    "wv": ("data", "model"),
+    "wo": ("model", "data"),
+    "w_gate": ("data", "model"),
+    "w_up": ("data", "model"),
+    "w_down": ("model", "data"),
+    # mamba2
+    "wz": ("data", "model"),
+    "wx": ("data", "model"),
+    "wB": ("data", None),
+    "wC": ("data", None),
+    "wdt": ("data", "model"),
+    "conv": (None, "model"),
+    "A_log": ("model",),
+    "D": ("model",),
+    "dt_bias": ("model",),
+    "norm": ("model",),  # gated-norm weight over d_inner
+    "out": ("model", "data"),
+}
+_MOE_RULES = {  # under a "moe" subtree (trailing dims (E, D, F) / (E, F, D))
+    "router": ("data", None),
+    "w_gate": ("model", "data", None),
+    "w_up": ("model", "data", None),
+    "w_down": ("model", None, "data"),
+}
+
+
+def _path_names(path):
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(k.key)
+        elif hasattr(k, "name"):
+            out.append(k.name)
+    return out
+
+
+def param_pspecs(param_tree, cfg: ModelConfig | None = None):
+    """PartitionSpec pytree for a params (or matching ShapeDtypeStruct) tree.
+
+    ``cfg.embed_sharding == "model_only"`` drops the data-axis ZeRO shard of
+    the embedding tables (required by vocab-parallel CE)."""
+    embed_core = (("model", None)
+                  if cfg is not None and cfg.embed_sharding == "model_only"
+                  else ("model", "data"))
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        if name in ("embed", "unembed"):
+            core = embed_core
+        else:
+            rules = (_MOE_RULES if "moe" in names and name in _MOE_RULES
+                     else _PARAM_RULES)
+            core = rules.get(name)
+        if core is None or leaf.ndim < len(core):
+            return P()  # norms, scalars, biases: replicate
+        pad = (None,) * (leaf.ndim - len(core))
+        return P(*pad, *core)
+
+    return jax.tree_util.tree_map_with_path(spec, param_tree)
+
+
+def choose_kv_partition(cfg: ModelConfig, tp: int) -> str:
+    """Shard decode KV caches by head when divisible, else by sequence
+    (flash-decoding with softmax-stat reduction over the model axis)."""
+    if cfg.num_kv_heads and cfg.num_kv_heads % tp == 0:
+        return "heads"
+    return "seq"
+
+
+def state_pspecs(state_tree, axes: MeshAxes):
+    """PartitionSpecs for a decode-state pytree from decode_state_specs()."""
+    kv_core = ((axes.bspec, axes.model, None, None)
+               if axes.kv_partition == "seq"
+               else (axes.bspec, None, axes.model, None))
+    rules = {
+        "k": kv_core,
+        "v": kv_core,
+        "ssm": (axes.bspec, axes.model, None, None),
+        "conv": (axes.bspec, None, axes.model),
+    }
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        if name == "pos":
+            return P()
+        if "enc_kv" in names:  # whisper cross-kv: heads always divisible
+            core = (axes.bspec, None, axes.model, None)
+        else:
+            core = rules.get(name)
+        if core is None:
+            return P()
+        pad = (None,) * (leaf.ndim - len(core))
+        return P(*pad, *core)
+
+    return jax.tree_util.tree_map_with_path(spec, state_tree)
+
+
+# ---------------------------------------------------------------------------
+# input specs per (config × shape)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill: token batch (+ stubbed modality embeddings).
+    decode: current tokens (B,) — the cache/state specs come from
+    ``model.decode_state_specs``.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    cd = cfg.compute_dtype
+    d = {}
+    if shape.kind == "decode":
+        d["tokens"] = jax.ShapeDtypeStruct((B,), i32)
+        return d
+    if cfg.family == "vlm":
+        pt = cfg.num_patch_tokens
+        d["patch_embeds"] = jax.ShapeDtypeStruct((B, pt, cfg.d_model), cd)
+        d["tokens"] = jax.ShapeDtypeStruct((B, S - pt), i32)
+        if shape.kind == "train":
+            d["labels"] = jax.ShapeDtypeStruct((B, S - pt), i32)
+        return d
+    if cfg.family == "encdec":
+        d["audio_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_audio_frames, cfg.d_model), cd)
+    d["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    if shape.kind == "train":
+        d["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    return d
+
+
+def input_pspecs(cfg: ModelConfig, shape: ShapeSpec, axes: MeshAxes) -> dict:
+    b = axes.bspec
+    d = {}
+    if shape.kind == "decode":
+        return {"tokens": P(b)}
+    if cfg.family == "vlm":
+        d["patch_embeds"] = P(b, None, None)
+    if cfg.family == "encdec":
+        d["audio_frames"] = P(b, None, None)
+    d["tokens"] = P(b, None)
+    if shape.kind == "train":
+        d["labels"] = P(b, None)
+    return d
+
+
+def batch_shardable(shape: ShapeSpec, mesh) -> bool:
+    n = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            n *= mesh.shape[ax]
+    return shape.global_batch % n == 0 and shape.global_batch >= n
+
+
+def axes_for(cfg: ModelConfig, shape: ShapeSpec, mesh) -> MeshAxes:
+    tp = mesh.shape.get("model", 1)
+    return make_axes(mesh, batch_shardable=batch_shardable(shape, mesh),
+                     kv_partition=choose_kv_partition(cfg, tp))
+
+
+def to_shardings(mesh, pspec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_params(model):
+    """Parameter ShapeDtypeStructs without allocating (eval_shape on init)."""
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))

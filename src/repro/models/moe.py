@@ -1,0 +1,151 @@
+"""Mixture-of-Experts FFN with capacity-based routing (GShard-style) and
+expert parallelism over the ``model`` mesh axis via ``shard_map``.
+
+Design (DESIGN.md §6 EP): at the MoE boundary the hidden states are already
+replicated over the model axis (the attention output all-reduce put them
+there), so dispatch is *local masking + scatter into a capacity buffer* on
+the device that owns the expert, and combine is a single psum over the model
+axis — no all-to-all and no (T, E, C) one-hot dispatch tensor (which at
+phi3.5-moe train_4k scale would be ~10 GB/device).
+
+Capacity semantics: each expert accepts at most C = ceil(cf·k·T/E) tokens per
+shard; overflow tokens are dropped for that expert (standard GShard). Slot
+C is a scratch row that absorbs dropped tokens and is discarded.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.sharding import MeshAxes, sc
+
+
+def moe_params(rng, cfg: ModelConfig, layers: int | None = None):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    pre = () if layers is None else (layers,)
+    ks = jax.random.split(rng, 4)
+    dt = cfg.param_dtype
+    return {
+        "router": dense_init(ks[0], (*pre, d, e), dtype=dt),
+        "w_gate": dense_init(ks[1], (*pre, e, d, f), in_axis=-2, dtype=dt),
+        "w_up": dense_init(ks[2], (*pre, e, d, f), in_axis=-2, dtype=dt),
+        "w_down": dense_init(ks[3], (*pre, e, f, d), in_axis=-2, dtype=dt),
+    }
+
+
+def capacity(cfg: ModelConfig, tokens: int) -> int:
+    return max(1, math.ceil(cfg.capacity_factor * cfg.experts_per_token *
+                            tokens / cfg.num_experts))
+
+
+def _moe_local(xf, router, w_gate, w_up, w_down, *, cfg: ModelConfig,
+               model_axis: str | None, batch_axes: tuple):
+    """Per-device MoE over local tokens ``xf`` (T, D) and local experts.
+
+    Inside shard_map: ``w_*`` hold E_loc experts; xf is replicated over the
+    model axis. Without shard_map (fallback/reference): all E experts local,
+    ``model_axis`` is None.
+    """
+    T, D = xf.shape
+    E = cfg.num_experts
+    k = cfg.experts_per_token
+    cd = cfg.compute_dtype
+    E_loc = w_gate.shape[0]
+    if model_axis is not None:
+        shard = jax.lax.axis_index(model_axis)
+    else:
+        shard = jnp.int32(0)
+
+    logits = (xf.astype(jnp.float32) @ router.astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    C = capacity(cfg, T)
+
+    def per_expert(wg_e, wu_e, wd_e, e_local):
+        e_id = shard * E_loc + e_local
+        w_te = jnp.sum(jnp.where(gate_idx == e_id, gate_vals, 0.0), axis=-1)  # (T,)
+        m = w_te > 0
+        posn = jnp.cumsum(m.astype(jnp.int32)) - 1
+        keep = m & (posn < C)
+        slot = jnp.where(keep, posn, C)
+        buf = jnp.zeros((C + 1, D), cd).at[slot].add(
+            jnp.where(m[:, None], xf.astype(cd), 0))
+        h = jax.nn.silu(buf @ wg_e.astype(cd)) * (buf @ wu_e.astype(cd))
+        out = h @ wd_e.astype(cd)  # (C+1, D)
+        y = out[slot] * jnp.where(keep, w_te, 0.0)[:, None].astype(cd)
+        return y
+
+    ys = jax.vmap(per_expert)(w_gate, w_up, w_down, jnp.arange(E_loc))
+    y = jnp.sum(ys, axis=0)  # (T, D)
+    if model_axis is not None:
+        y = jax.lax.psum(y, model_axis)
+
+    # auxiliary losses (Switch/GShard load balancing + router z-loss)
+    f_e = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, E, dtype=jnp.float32), axis=1), axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    if batch_axes and model_axis is not None:
+        f_e = jax.lax.pmean(f_e, batch_axes)
+        p_e = jax.lax.pmean(p_e, batch_axes)
+        z = jax.lax.pmean(z, batch_axes)
+    load = E * jnp.sum(f_e * p_e)
+    return y, jnp.stack([load, z])
+
+
+def moe_ffn(x, p, cfg: ModelConfig, axes: MeshAxes, mesh=None):
+    """MoE FFN. x: (B, S, D) -> (y: (B, S, D), aux: (2,) [load_balance, z]).
+
+    With a mesh and sharding enabled, experts are sharded over ``axes.model``
+    (EP); otherwise runs the dense local fallback (also the reference oracle
+    for equivalence tests).
+    """
+    B, S, D = x.shape
+    xf = x.reshape(B * S, D)
+    cd = cfg.compute_dtype
+    if axes.enabled and mesh is not None and axes.model is not None:
+        tp = mesh.shape[axes.model]
+        assert cfg.num_experts % tp == 0, (
+            f"num_experts={cfg.num_experts} must divide model axis {tp}")
+        fn = jax.shard_map(
+            partial(_moe_local, cfg=cfg, model_axis=axes.model,
+                    batch_axes=axes.batch),
+            mesh=mesh,
+            in_specs=(P(axes.bspec, None), P(None, None),
+                      P(axes.model, None, None), P(axes.model, None, None),
+                      P(axes.model, None, None)),
+            out_specs=(P(axes.bspec, None), P()),
+        )
+        # cast experts to bf16 *before* the shard_map boundary: the ZeRO
+        # (data-axis) gather of each expert then moves/holds half the bytes
+        y, aux = fn(xf, p["router"], p["w_gate"].astype(cd),
+                    p["w_up"].astype(cd), p["w_down"].astype(cd))
+    else:
+        y, aux = _moe_local(xf, p["router"], p["w_gate"], p["w_up"],
+                            p["w_down"], cfg=cfg, model_axis=None,
+                            batch_axes=())
+    y = sc(y.reshape(B, S, D), axes, "batch", None, None)
+    return y, aux
+
+
+def moe_block(x, p, cfg: ModelConfig, axes: MeshAxes, angles, mesh=None, *,
+              causal: bool = True):
+    """Pre-norm attention + MoE-FFN block."""
+    from repro.models.layers import full_attention, mlp_block, project_qkv, rms_norm  # noqa: PLC0415
+
+    cd = cfg.compute_dtype
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = project_qkv(h, p["attn"], cfg, axes, angles)
+    o = full_attention(q, k, v, cfg, axes, causal=causal)
+    x = x + (o @ p["attn"]["wo"].astype(cd))
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    y, aux = moe_ffn(h, p["moe"], cfg, axes, mesh)
+    return x + y, aux

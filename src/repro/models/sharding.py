@@ -1,0 +1,67 @@
+"""Sharding descriptors and activation-constraint helpers.
+
+Model code never references a concrete mesh; it gets a :class:`MeshAxes`
+describing which *named axes* carry batch / model parallelism and applies
+``with_sharding_constraint`` through :func:`sc`. With ``enabled=False`` (or
+empty axes) every constraint is a no-op, so the same code runs on a single
+CPU device in tests.
+
+Conventions (see DESIGN.md §6):
+  * batch dims of activations  -> ``axes.batch``  (e.g. ("pod","data"))
+  * attention heads / d_ff / experts / vocab -> ``axes.model``
+  * decode KV-cache sequence dim -> ``axes.model`` when kv-head sharding is
+    impossible (GQA with kv_heads < |model|): flash-decoding style.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    batch: tuple[str, ...] = ()  # axes batch dim is sharded over
+    model: str | None = None     # tensor-parallel axis name
+    enabled: bool = False
+    # decode-time KV partitioning: "heads" | "seq" (flash-decoding)
+    kv_partition: str = "heads"
+
+    @property
+    def bspec(self):
+        """Partition entry for a batch dimension."""
+        return self.batch if self.batch else None
+
+    def replace(self, **kw) -> "MeshAxes":
+        return replace(self, **kw)
+
+
+SINGLE = MeshAxes()  # no sharding: unit tests / single-device smoke runs
+
+
+def make_axes(mesh, *, batch_shardable: bool = True, kv_partition: str = "heads") -> MeshAxes:
+    """Derive MeshAxes from a mesh built by launch.mesh.make_production_mesh."""
+    names = mesh.axis_names
+    batch = tuple(n for n in names if n in ("pod", "data")) if batch_shardable else ()
+    model = "model" if "model" in names else None
+    return MeshAxes(batch=batch, model=model, enabled=True, kv_partition=kv_partition)
+
+
+def sc(x, axes: MeshAxes, *dims):
+    """``with_sharding_constraint(x, P(*dims))`` if sharding is enabled.
+
+    ``dims`` entries are either None, an axis name string, a tuple of axis
+    names, or the sentinel strings "batch"/"model" resolved via ``axes``.
+    """
+    if not axes.enabled:
+        return x
+    resolved = []
+    for d in dims:
+        if d == "batch":
+            resolved.append(axes.bspec)
+        elif d == "model":
+            resolved.append(axes.model)
+        else:
+            resolved.append(d)
+    return jax.lax.with_sharding_constraint(x, P(*resolved))

@@ -1,0 +1,750 @@
+"""Model families assembled from layers/moe/mamba, all config-driven.
+
+Families: dense (+vlm), moe, ssm (mamba2), hybrid (zamba2), encdec (whisper).
+Every family exposes the same interface (see :class:`BaseLM`):
+
+    init(rng) -> params
+    loss(params, batch) -> (scalar, metrics)           # training
+    prefill(params, batch) -> (last_logits, state)     # inference prefill
+    decode_step(params, state, tokens) -> (logits, state)  # 1 token, O(cache)
+    decode_state_specs(batch, seq_len) -> ShapeDtypeStructs
+
+Layer stacks are scanned (``jax.lax.scan`` over stacked params) so the HLO —
+and therefore compile time on the 512-device dry-run mesh — stays O(1) in
+depth. Activation checkpointing policy comes from ``cfg.remat``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models.sharding import MeshAxes, sc
+
+
+def _remat(f, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(f)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if cfg.remat == "tp_out":
+        # save the per-layer TP-psum outputs: the rematted backward skips
+        # the forward model-axis all-reduces (Megatron-style selective
+        # recompute; costs 2 x (B,S,D) bf16 saved per layer)
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.save_only_these_names(
+                "attn_out", "mlp_out"))
+    return f
+
+
+def _positions(cfg: ModelConfig, B: int, S: int, offset=0):
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (B, S))
+    if cfg.mrope_sections:
+        # frontend stub: text-like ids on all three M-RoPE streams
+        return jnp.broadcast_to(pos[None], (3, B, S))
+    return pos
+
+
+def _angles(cfg: ModelConfig, positions):
+    return L.rope_angles(positions, cfg.head_dim, cfg.rope_theta,
+                         cfg.mrope_sections)
+
+
+def _ce_chunk_gather(hc, lc, embed, axes: MeshAxes):
+    """Baseline: take_along_axis over the vocab-sharded logits. GSPMD cannot
+    shard the label gather and inserts a full (B, qc, V) all-gather — the
+    measured baseline pathology the §Perf hillclimb removes."""
+    logits = jnp.einsum("bqd,vd->bqv", hc.astype(jnp.float32),
+                        embed.astype(jnp.float32))
+    logits = sc(logits, axes, "batch", None, "model")
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    mask = lc >= 0
+    lbl = jnp.where(mask, lc, 0)
+    gold = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+    tok_loss = jnp.where(mask, lse - gold, 0.0)
+    return jnp.sum(tok_loss), jnp.sum(mask.astype(jnp.float32))
+
+
+def _ce_chunk_vocab_parallel(hc, lc, embed, axes: MeshAxes, mesh):
+    """Vocab-parallel CE (Megatron-style) under shard_map: each model-rank
+    computes its local logits shard, extracts the gold logit if the label
+    falls in its shard, and only softmax *statistics* cross the wire
+    (two scalars per token instead of the V-wide logits row)."""
+    from jax.sharding import PartitionSpec as P  # noqa: PLC0415
+
+    def local(hc, lc, emb):
+        # emb: (V_loc, D) local shard; hc replicated over model
+        shard = jax.lax.axis_index(axes.model)
+        v_loc = emb.shape[0]
+        logits = jnp.einsum("bqd,vd->bqv", hc.astype(jnp.float32),
+                            emb.astype(jnp.float32))
+        local_max = jnp.max(logits, axis=-1)
+        # stop_gradient: the max is a numerical-stability shift (standard
+        # logsumexp trick) and pmax has no differentiation rule
+        gmax = jax.lax.pmax(jax.lax.stop_gradient(local_max), axes.model)
+        sumexp = jnp.sum(jnp.exp(logits - gmax[..., None]), axis=-1)
+        sumexp = jax.lax.psum(sumexp, axes.model)
+        lse = jnp.log(sumexp) + gmax
+        mask = lc >= 0
+        lbl = jnp.where(mask, lc, 0)
+        idx = lbl - shard * v_loc
+        in_shard = (idx >= 0) & (idx < v_loc)
+        gold_loc = jnp.take_along_axis(
+            logits, jnp.clip(idx, 0, v_loc - 1)[..., None], axis=-1)[..., 0]
+        gold = jax.lax.psum(jnp.where(in_shard, gold_loc, 0.0), axes.model)
+        tok_loss = jnp.where(mask, lse - gold, 0.0)
+        ls = jnp.sum(tok_loss)
+        cnt = jnp.sum(mask.astype(jnp.float32))
+        if axes.batch:
+            ls = jax.lax.psum(ls, axes.batch)
+            cnt = jax.lax.psum(cnt, axes.batch)
+        return ls, cnt
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axes.bspec, None, None), P(axes.bspec, None),
+                  P(axes.model, None)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return fn(hc, lc, embed)
+
+
+def chunked_ce_loss(h, embed, labels, cfg: ModelConfig, axes: MeshAxes,
+                    chunk: int = 512, mesh=None):
+    """Cross-entropy computed in sequence chunks so the (B, S, V) logits are
+    never materialized (V up to 256k: unchunked fp32 logits would be
+    ~67 GB/device at minitron train_4k scale). Vocab stays sharded over the
+    model axis inside each chunk; ``cfg.ce_impl`` picks the gold-logit
+    extraction strategy (see the two _ce_chunk_* variants)."""
+    B, S, D = h.shape
+    qc = min(chunk, S)
+    n = S // qc
+    hr = h.reshape(B, n, qc, D)
+    lr = labels.reshape(B, n, qc)
+    use_vp = (cfg.ce_impl == "vocab_parallel" and axes.enabled
+              and mesh is not None and axes.model is not None)
+
+    def chunk_loss(hc, lc):
+        if use_vp:
+            return _ce_chunk_vocab_parallel(hc, lc, embed, axes, mesh)
+        return _ce_chunk_gather(hc, lc, embed, axes)
+
+    def body(carry, inp):
+        hc, lc = inp
+        ls, cnt = _remat(chunk_loss, cfg)(hc, lc)
+        return (carry[0] + ls, carry[1] + cnt), None
+
+    (tot, cnt), _ = L.xscan(
+        cfg, body, (jnp.float32(0), jnp.float32(0)),
+        (jnp.moveaxis(hr, 1, 0), jnp.moveaxis(lr, 1, 0)))
+    return tot / jnp.maximum(cnt, 1)
+
+
+class BaseLM:
+    def __init__(self, cfg: ModelConfig, axes: MeshAxes, mesh=None):
+        self.cfg = cfg
+        self.axes = axes
+        self.mesh = mesh
+
+    # ---- embedding helpers ----
+    def _embed_params(self, rng):
+        cfg = self.cfg
+        ks = jax.random.split(rng, 2)
+        p = {"embed": L.embed_init(ks[0], (cfg.vocab_padded, cfg.d_model),
+                                   cfg.param_dtype),
+             "ln_f": jnp.ones((cfg.d_model,), cfg.param_dtype)}
+        if not cfg.tie_embeddings:
+            p["unembed"] = L.embed_init(ks[1], (cfg.vocab_padded, cfg.d_model),
+                                        cfg.param_dtype)
+        return p
+
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        e = params["embed"].astype(cfg.compute_dtype)[tokens]
+        return sc(e, self.axes, "batch", None, None)
+
+    def _unembed_table(self, params):
+        return params.get("unembed", params["embed"])
+
+    def _logits(self, params, h):
+        """Last-position logits (B, V) in fp32."""
+        h = L.rms_norm(h, params["ln_f"], self.cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", h.astype(jnp.float32),
+                            self._unembed_table(params).astype(jnp.float32))
+        return sc(logits, self.axes, "batch", "model")
+
+    def _hidden_loss(self, params, h, labels):
+        h = L.rms_norm(h, params["ln_f"], self.cfg.norm_eps)
+        return chunked_ce_loss(h, self._unembed_table(params), labels,
+                               self.cfg, self.axes, mesh=self.mesh)
+
+    # interface stubs
+    def init(self, rng):
+        raise NotImplementedError
+
+    def loss(self, params, batch):
+        raise NotImplementedError
+
+    def prefill(self, params, batch):
+        raise NotImplementedError
+
+    def decode_step(self, params, state, tokens):
+        raise NotImplementedError
+
+    def decode_state_specs(self, batch: int, seq_len: int):
+        raise NotImplementedError
+
+    @staticmethod
+    def _pad_kv(kv, pad_to: int | None):
+        """Pad prefill KV caches along the sequence dim to ``pad_to`` so
+        subsequent decode steps have write headroom."""
+        if pad_to is None:
+            return kv
+        def pad(a):
+            s = a.shape[2]
+            return (jnp.pad(a, [(0, 0), (0, 0), (0, pad_to - s)] +
+                            [(0, 0)] * (a.ndim - 3)) if pad_to > s else a)
+        return jax.tree.map(pad, kv)
+
+    def kv_cache_specs(self, stack: int, batch: int, seq_len: int):
+        cfg = self.cfg
+        cd = cfg.compute_dtype
+        shp = (stack, batch, seq_len, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": jax.ShapeDtypeStruct(shp, cd),
+                "v": jax.ShapeDtypeStruct(shp, cd)}
+
+
+# ---------------------------------------------------------------------------
+# dense decoder LM (also VLM backbone: patch embeddings prepended)
+# ---------------------------------------------------------------------------
+
+
+class DenseLM(BaseLM):
+    def init(self, rng):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(rng)
+        p = self._embed_params(k1)
+        p["layers"] = L.block_params(k2, cfg, cfg.num_layers)
+        return p
+
+    def _trunk(self, params, h, angles, collect_kv: bool = False):
+        cfg = self.cfg
+
+        def body(x, lp):
+            if collect_kv:
+                hn = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+                q, k, v = L.project_qkv(hn, lp["attn"], cfg, self.axes, angles)
+                o = L.full_attention(q, k, v, cfg, self.axes, causal=True)
+                x = x + (o @ lp["attn"]["wo"].astype(cfg.compute_dtype))
+                hn = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+                x = x + L.mlp_block(hn, lp["mlp"], cfg, self.axes)
+                return x, {"k": k.astype(cfg.compute_dtype),
+                           "v": v.astype(cfg.compute_dtype)}
+            x = L.transformer_block(x, lp, cfg, self.axes, angles, causal=True)
+            return x, None
+
+        return L.xscan(cfg, _remat(body, cfg), h, params["layers"])
+
+    def _inputs_to_h(self, params, batch):
+        """Embed tokens; VLM prepends stubbed patch embeddings."""
+        cfg = self.cfg
+        h = self._embed(params, batch["tokens"])
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(cfg.compute_dtype)
+            h = jnp.concatenate([sc(pe, self.axes, "batch", None, None), h],
+                                axis=1)
+        return h
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h = self._inputs_to_h(params, batch)
+        B, S, _ = h.shape
+        angles = _angles(cfg, _positions(cfg, B, S))
+        h, _ = self._trunk(params, h, angles)
+        labels = batch["labels"]
+        if h.shape[1] != labels.shape[1]:  # vlm: no loss on patch positions
+            pad = -jnp.ones((B, h.shape[1] - labels.shape[1]), labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        loss = self._hidden_loss(params, h, labels)
+        return loss, {"ce": loss}
+
+    def prefill(self, params, batch, pad_to: int | None = None):
+        cfg = self.cfg
+        h = self._inputs_to_h(params, batch)
+        B, S, _ = h.shape
+        angles = _angles(cfg, _positions(cfg, B, S))
+        h, kv = self._trunk(params, h, angles, collect_kv=True)
+        logits = self._logits(params, h[:, -1])
+        state = {"kv": self._pad_kv(kv, pad_to), "pos": jnp.int32(S)}
+        return logits, state
+
+    def decode_step(self, params, state, tokens):
+        cfg = self.cfg
+        h = self._embed(params, tokens[:, None])
+        B = h.shape[0]
+        pos = state["pos"]
+        Smax = state["kv"]["k"].shape[2]
+        write_pos = jnp.minimum(pos, Smax - 1)
+        angles = _angles(cfg, _positions(cfg, B, 1, offset=pos))
+
+        if cfg.decode_loop == "fori":
+            # full cache as loop carry: in-place updates, single buffer
+            def fbody(i, carry):
+                x, ck, cv = carry
+                lp = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, False),
+                    params["layers"])
+                cache = {"k": jax.lax.dynamic_index_in_dim(ck, i, 0, False),
+                         "v": jax.lax.dynamic_index_in_dim(cv, i, 0, False)}
+                x, cache = L.transformer_block_decode(
+                    x, lp, cfg, self.axes, angles, cache, write_pos)
+                ck = jax.lax.dynamic_update_index_in_dim(
+                    ck, cache["k"], i, 0)
+                cv = jax.lax.dynamic_update_index_in_dim(
+                    cv, cache["v"], i, 0)
+                return (x, ck, cv)
+
+            h, ck, cv = jax.lax.fori_loop(
+                0, cfg.num_layers, fbody,
+                (h, state["kv"]["k"], state["kv"]["v"]),
+                unroll=True if cfg.unroll_scans else 1)
+            logits = self._logits(params, h[:, 0])
+            return logits, {"kv": {"k": ck, "v": cv}, "pos": pos + 1}
+
+        def body(x, inp):
+            lp, cache = inp
+            x, cache = L.transformer_block_decode(x, lp, cfg, self.axes,
+                                                  angles, cache, write_pos)
+            return x, cache
+
+        h, kv = L.xscan(cfg, body, h, (params["layers"], state["kv"]))
+        logits = self._logits(params, h[:, 0])
+        return logits, {"kv": kv, "pos": pos + 1}
+
+    def decode_state_specs(self, batch: int, seq_len: int):
+        return {"kv": self.kv_cache_specs(self.cfg.num_layers, batch, seq_len),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# MoE decoder LM
+# ---------------------------------------------------------------------------
+
+
+class MoeLM(BaseLM):
+    def init(self, rng):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(rng, 3)
+        p = self._embed_params(k1)
+        nl = cfg.num_layers
+        p["layers"] = {
+            "attn": L.attn_params(k2, cfg, nl),
+            "moe": MOE.moe_params(k3, cfg, nl),
+            "ln1": jnp.ones((nl, cfg.d_model), cfg.param_dtype),
+            "ln2": jnp.ones((nl, cfg.d_model), cfg.param_dtype),
+        }
+        return p
+
+    def _trunk(self, params, h, angles, collect_kv: bool = False):
+        cfg = self.cfg
+
+        def body(carry, lp):
+            x, aux = carry
+            hn = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = L.project_qkv(hn, lp["attn"], cfg, self.axes, angles)
+            o = L.full_attention(q, k, v, cfg, self.axes, causal=True)
+            x = x + (o @ lp["attn"]["wo"].astype(cfg.compute_dtype))
+            hn = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            y, a = MOE.moe_ffn(hn, lp["moe"], cfg, self.axes, self.mesh)
+            x = x + y
+            out = ({"k": k.astype(cfg.compute_dtype),
+                    "v": v.astype(cfg.compute_dtype)} if collect_kv else None)
+            return (x, aux + a), out
+
+        (h, aux), kv = L.xscan(cfg, _remat(body, cfg), (h, jnp.zeros(2)),
+                                params["layers"])
+        return h, aux / cfg.num_layers, kv
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h = self._embed(params, batch["tokens"])
+        B, S, _ = h.shape
+        angles = _angles(cfg, _positions(cfg, B, S))
+        h, aux, _ = self._trunk(params, h, angles)
+        ce = self._hidden_loss(params, h, batch["labels"])
+        loss = ce + 0.01 * aux[0] + 1e-3 * aux[1]
+        return loss, {"ce": ce, "load_balance": aux[0], "router_z": aux[1]}
+
+    def prefill(self, params, batch, pad_to: int | None = None):
+        cfg = self.cfg
+        h = self._embed(params, batch["tokens"])
+        B, S, _ = h.shape
+        angles = _angles(cfg, _positions(cfg, B, S))
+        h, _, kv = self._trunk(params, h, angles, collect_kv=True)
+        return (self._logits(params, h[:, -1]),
+                {"kv": self._pad_kv(kv, pad_to), "pos": jnp.int32(S)})
+
+    def decode_step(self, params, state, tokens):
+        cfg = self.cfg
+        h = self._embed(params, tokens[:, None])
+        B = h.shape[0]
+        pos = state["pos"]
+        Smax = state["kv"]["k"].shape[2]
+        write_pos = jnp.minimum(pos, Smax - 1)
+        angles = _angles(cfg, _positions(cfg, B, 1, offset=pos))
+
+        def body(x, inp):
+            lp, cache = inp
+            hn = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = L.project_qkv(hn, lp["attn"], cfg, self.axes, angles)
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, write_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, write_pos, 0, 0))
+            o = L.decode_attention(q, ck, cv, write_pos + 1, cfg, self.axes)
+            x = x + (o @ lp["attn"]["wo"].astype(cfg.compute_dtype))
+            hn = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            y, _ = MOE.moe_ffn(hn, lp["moe"], cfg, self.axes, self.mesh)
+            return x + y, {"k": ck, "v": cv}
+
+        h, kv = L.xscan(cfg, body, h, (params["layers"], state["kv"]))
+        return self._logits(params, h[:, 0]), {"kv": kv, "pos": pos + 1}
+
+    def decode_state_specs(self, batch: int, seq_len: int):
+        return {"kv": self.kv_cache_specs(self.cfg.num_layers, batch, seq_len),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 LM (attention-free)
+# ---------------------------------------------------------------------------
+
+
+class MambaLM(BaseLM):
+    def init(self, rng):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(rng)
+        p = self._embed_params(k1)
+        p["layers"] = M.mamba_params(k2, cfg, cfg.num_layers)
+        return p
+
+    def _trunk(self, params, h, collect_state: bool = False):
+        cfg = self.cfg
+
+        def body(x, lp):
+            x, st = M.mamba_block(x, lp, cfg, self.axes)
+            return x, st if collect_state else None
+
+        return L.xscan(cfg, _remat(body, cfg), h, params["layers"])
+
+    def loss(self, params, batch):
+        h = self._embed(params, batch["tokens"])
+        h, _ = self._trunk(params, h)
+        ce = self._hidden_loss(params, h, batch["labels"])
+        return ce, {"ce": ce}
+
+    def prefill(self, params, batch, pad_to: int | None = None):
+        h = self._embed(params, batch["tokens"])
+        S = h.shape[1]
+        h, st = self._trunk(params, h, collect_state=True)
+        logits = self._logits(params, h[:, -1])
+        ssm, conv = st
+        return logits, {"ssm": ssm, "conv": conv, "pos": jnp.int32(S)}
+
+    def decode_step(self, params, state, tokens):
+        cfg = self.cfg
+        h = self._embed(params, tokens[:, None])
+
+        def body(x, inp):
+            lp, ssm, conv = inp
+            x, (ssm, conv) = M.mamba_block_decode(x, lp, cfg, self.axes,
+                                                  (ssm, conv))
+            return x, (ssm, conv)
+
+        h, (ssm, conv) = L.xscan(
+            cfg, body, h, (params["layers"], state["ssm"], state["conv"]))
+        logits = self._logits(params, h[:, 0])
+        return logits, {"ssm": ssm, "conv": conv, "pos": state["pos"] + 1}
+
+    def decode_state_specs(self, batch: int, seq_len: int):
+        ssm, conv = M.mamba_state_specs(self.cfg, batch, self.cfg.num_layers)
+        return {"ssm": ssm, "conv": conv,
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (zamba2): Mamba2 trunk + one weight-shared attention block
+# ---------------------------------------------------------------------------
+
+
+class HybridLM(BaseLM):
+    """``num_layers`` Mamba2 blocks; after every ``attn_every`` of them the
+    *same* (weight-shared) transformer block runs. Params for the SSM trunk
+    are stacked (n_super, attn_every, ...) for a two-level scan."""
+
+    @property
+    def n_super(self) -> int:
+        assert self.cfg.num_layers % self.cfg.attn_every == 0
+        return self.cfg.num_layers // self.cfg.attn_every
+
+    def init(self, rng):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(rng, 3)
+        p = self._embed_params(k1)
+        flat = M.mamba_params(k2, cfg, cfg.num_layers)
+        p["ssm_layers"] = jax.tree.map(
+            lambda a: a.reshape(self.n_super, cfg.attn_every, *a.shape[1:]),
+            flat)
+        p["shared"] = L.block_params(k3, cfg)  # unstacked = weight-shared
+        return p
+
+    def _super_block(self, x, sp, shared, angles, collect, kv_cache=None,
+                     write_pos=None):
+        """attn_every mamba layers then the shared attention block.
+
+        Training/prefill: ``kv_cache`` is None -> full attention; returns
+        (x, (ssm_states, conv_states, k, v)). Decode handled separately."""
+        cfg = self.cfg
+
+        def inner(x, lp):
+            x, st = M.mamba_block(x, lp, cfg, self.axes)
+            return x, st if collect else None
+
+        x, states = L.xscan(cfg, inner, x, sp)
+        if collect:
+            hn = L.rms_norm(x, shared["ln1"], cfg.norm_eps)
+            q, k, v = L.project_qkv(hn, shared["attn"], cfg, self.axes, angles)
+            o = L.full_attention(q, k, v, cfg, self.axes, causal=True)
+            x = x + (o @ shared["attn"]["wo"].astype(cfg.compute_dtype))
+            hn = L.rms_norm(x, shared["ln2"], cfg.norm_eps)
+            x = x + L.mlp_block(hn, shared["mlp"], cfg, self.axes)
+            return x, (states, k.astype(cfg.compute_dtype),
+                       v.astype(cfg.compute_dtype))
+        x = L.transformer_block(x, shared, cfg, self.axes, angles, causal=True)
+        return x, None
+
+    def _trunk(self, params, h, angles, collect: bool = False):
+        cfg = self.cfg
+        shared = params["shared"]
+
+        def body(x, sp):
+            return _remat(
+                partial(self._super_block, shared=shared, angles=angles,
+                        collect=collect), cfg)(x, sp)
+
+        return L.xscan(cfg, body, h, params["ssm_layers"])
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h = self._embed(params, batch["tokens"])
+        B, S, _ = h.shape
+        angles = _angles(cfg, _positions(cfg, B, S))
+        h, _ = self._trunk(params, h, angles)
+        ce = self._hidden_loss(params, h, batch["labels"])
+        return ce, {"ce": ce}
+
+    def prefill(self, params, batch, pad_to: int | None = None):
+        cfg = self.cfg
+        h = self._embed(params, batch["tokens"])
+        B, S, _ = h.shape
+        angles = _angles(cfg, _positions(cfg, B, S))
+        h, (states, k, v) = self._trunk(params, h, angles, collect=True)
+        ssm, conv = states
+        logits = self._logits(params, h[:, -1])
+        kv = self._pad_kv({"k": k, "v": v}, pad_to)
+        return logits, {"ssm": ssm, "conv": conv, "kv": kv,
+                        "pos": jnp.int32(S)}
+
+    def decode_step(self, params, state, tokens):
+        cfg = self.cfg
+        h = self._embed(params, tokens[:, None])
+        B = h.shape[0]
+        pos = state["pos"]
+        Smax = state["kv"]["k"].shape[2]
+        write_pos = jnp.minimum(pos, Smax - 1)
+        angles = _angles(cfg, _positions(cfg, B, 1, offset=pos))
+        shared = params["shared"]
+
+        def body(x, inp):
+            sp, ssm, conv, cache = inp
+
+            def inner(x, lpst):
+                lp, s1, s2 = lpst
+                x, (s1, s2) = M.mamba_block_decode(x, lp, cfg, self.axes,
+                                                   (s1, s2))
+                return x, (s1, s2)
+
+            x, (ssm, conv) = L.xscan(cfg, inner, x, (sp, ssm, conv))
+            x, cache = L.transformer_block_decode(x, shared, cfg, self.axes,
+                                                  angles, cache, write_pos)
+            return x, (ssm, conv, cache)
+
+        h, (ssm, conv, kv) = L.xscan(
+            cfg, body, h, (params["ssm_layers"], state["ssm"], state["conv"],
+                           state["kv"]))
+        logits = self._logits(params, h[:, 0])
+        return logits, {"ssm": ssm, "conv": conv, "kv": kv, "pos": pos + 1}
+
+    def decode_state_specs(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        ssm, conv = M.mamba_state_specs(cfg, batch, cfg.num_layers)
+        re = lambda s: jax.ShapeDtypeStruct(
+            (self.n_super, cfg.attn_every, *s.shape[1:]), s.dtype)
+        return {"ssm": re(ssm), "conv": re(conv),
+                "kv": self.kv_cache_specs(self.n_super, batch, seq_len),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (whisper): bidirectional encoder over stubbed audio frames,
+# causal decoder with cross-attention.
+# ---------------------------------------------------------------------------
+
+
+class EncDecLM(BaseLM):
+    def init(self, rng):
+        cfg = self.cfg
+        k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+        p = self._embed_params(k1)
+        p["enc_layers"] = L.block_params(k2, cfg, cfg.num_layers)
+        nd = cfg.num_decoder_layers
+        p["dec_layers"] = L.block_params(k3, cfg, nd)
+        p["dec_layers"]["cross"] = L.attn_params(k4, cfg, nd)
+        p["dec_layers"]["ln_x"] = jnp.ones((nd, cfg.d_model), cfg.param_dtype)
+        p["ln_enc"] = jnp.ones((cfg.d_model,), cfg.param_dtype)
+        return p
+
+    def encode(self, params, audio_frames):
+        cfg = self.cfg
+        h = audio_frames.astype(cfg.compute_dtype)
+        h = sc(h, self.axes, "batch", None, None)
+        B, S, _ = h.shape
+        angles = _angles(cfg, _positions(cfg, B, S))
+
+        def body(x, lp):
+            return (L.transformer_block(x, lp, cfg, self.axes, angles,
+                                        causal=False), None)
+
+        h, _ = L.xscan(cfg, _remat(body, cfg), h, params["enc_layers"])
+        return L.rms_norm(h, params["ln_enc"], cfg.norm_eps)
+
+    def _decoder(self, params, h, enc_out, angles, collect_kv: bool = False):
+        cfg = self.cfg
+
+        def body(x, lp):
+            hn = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = L.project_qkv(hn, lp["attn"], cfg, self.axes, angles)
+            o = L.full_attention(q, k, v, cfg, self.axes, causal=True)
+            x = x + (o @ lp["attn"]["wo"].astype(cfg.compute_dtype))
+            x = L.cross_attn_sublock(x, lp["cross"], lp["ln_x"], cfg,
+                                     self.axes, enc_out)
+            hn = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            x = x + L.mlp_block(hn, lp["mlp"], cfg, self.axes)
+            out = ({"k": k.astype(cfg.compute_dtype),
+                    "v": v.astype(cfg.compute_dtype)} if collect_kv else None)
+            return x, out
+
+        return L.xscan(cfg, _remat(body, cfg), h, params["dec_layers"])
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["audio_frames"])
+        h = self._embed(params, batch["tokens"])
+        B, S, _ = h.shape
+        angles = _angles(cfg, _positions(cfg, B, S))
+        h, _ = self._decoder(params, h, enc_out, angles)
+        ce = self._hidden_loss(params, h, batch["labels"])
+        return ce, {"ce": ce}
+
+    def _cross_kv(self, params, enc_out):
+        """Precompute per-decoder-layer cross-attention k/v from enc_out."""
+        cfg = self.cfg
+        cd = cfg.compute_dtype
+        B, S, _ = enc_out.shape
+
+        def body(_, lp):
+            k = (enc_out @ lp["wk"].astype(cd)).reshape(
+                B, S, cfg.num_kv_heads, cfg.head_dim)
+            v = (enc_out @ lp["wv"].astype(cd)).reshape(
+                B, S, cfg.num_kv_heads, cfg.head_dim)
+            return None, {"k": k, "v": v}
+
+        _, enc_kv = L.xscan(cfg, body, None, params["dec_layers"]["cross"])
+        return enc_kv
+
+    def prefill(self, params, batch, pad_to: int | None = None):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["audio_frames"])
+        h = self._embed(params, batch["tokens"])
+        B, S, _ = h.shape
+        angles = _angles(cfg, _positions(cfg, B, S))
+        h, kv = self._decoder(params, h, enc_out, angles, collect_kv=True)
+        logits = self._logits(params, h[:, -1])
+        return logits, {"kv": self._pad_kv(kv, pad_to),
+                        "enc_kv": self._cross_kv(params, enc_out),
+                        "pos": jnp.int32(S)}
+
+    def decode_step(self, params, state, tokens):
+        cfg = self.cfg
+        h = self._embed(params, tokens[:, None])
+        B = h.shape[0]
+        pos = state["pos"]
+        Smax = state["kv"]["k"].shape[2]
+        write_pos = jnp.minimum(pos, Smax - 1)
+        angles = _angles(cfg, _positions(cfg, B, 1, offset=pos))
+
+        def body(x, inp):
+            lp, cache, enc_kv = inp
+            hn = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = L.project_qkv(hn, lp["attn"], cfg, self.axes, angles)
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, write_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, write_pos, 0, 0))
+            o = L.decode_attention(q, ck, cv, write_pos + 1, cfg, self.axes)
+            x = x + (o @ lp["attn"]["wo"].astype(cfg.compute_dtype))
+            x = L.cross_block_decode(
+                x, {"ln1": lp["ln_x"], "attn": lp["cross"]}, cfg, self.axes,
+                enc_kv)
+            hn = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            x = x + L.mlp_block(hn, lp["mlp"], cfg, self.axes)
+            return x, {"k": ck, "v": cv}
+
+        dl = params["dec_layers"]
+        lp_only = {k: dl[k] for k in ("attn", "mlp", "ln1", "ln2", "cross",
+                                      "ln_x")}
+        h, kv = L.xscan(cfg, body, h, (lp_only, state["kv"], state["enc_kv"]))
+        logits = self._logits(params, h[:, 0])
+        return logits, {"kv": kv, "enc_kv": state["enc_kv"], "pos": pos + 1}
+
+    def decode_state_specs(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        return {
+            "kv": self.kv_cache_specs(cfg.num_decoder_layers, batch, seq_len),
+            "enc_kv": self.kv_cache_specs(cfg.num_decoder_layers, batch,
+                                          cfg.num_audio_frames),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+
+FAMILIES = {
+    "dense": DenseLM,
+    "vlm": DenseLM,
+    "moe": MoeLM,
+    "ssm": MambaLM,
+    "hybrid": HybridLM,
+    "encdec": EncDecLM,
+}
+
+
+def build_model(cfg: ModelConfig, axes: MeshAxes | None = None, mesh=None):
+    from repro.models.sharding import SINGLE  # noqa: PLC0415
+    return FAMILIES[cfg.family](cfg, axes or SINGLE, mesh)

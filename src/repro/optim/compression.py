@@ -1,0 +1,80 @@
+"""Gradient compression with error feedback for the cross-pod all-reduce.
+
+At multi-pod scale the pod axis rides the slow DCN link, so the cross-pod
+gradient reduction is the wire-dominant collective. ``compressed_psum``
+performs int8 block-quantized summation over a mesh axis inside shard_map:
+the int8 payload (plus one fp32 scale per block) cuts wire bytes ~3.6×
+versus fp32. ``ErrorFeedback`` keeps the quantization residual and re-adds
+it next step (EF-SGD/1-bit-Adam style), which restores convergence.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+BLOCK = 256
+
+
+def quantize_int8(x, block: int = BLOCK):
+    """Per-block symmetric int8 quantization. x: any shape -> (q, scales,
+    meta) with q int8 of x.size padded to block multiple."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blk = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blk), axis=1, keepdims=True) / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blk / safe), -127, 127).astype(jnp.int8)
+    return q, scale, (n, x.shape, x.dtype)
+
+
+def dequantize_int8(q, scale, meta):
+    n, shape, dtype = meta
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return flat.reshape(shape).astype(dtype)
+
+
+def psum_int8(x, axis: str):
+    """Drop-in for ``jax.lax.psum`` *inside* shard_map: quantize, all-gather
+    the int8 payload (+ fp32 per-block scales) over ``axis``, dequantize and
+    sum locally. Wire: ~1.016 B/element vs 4 B for an fp32 ring psum."""
+    q, scale, meta = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis)          # (n_axis, blocks, BLOCK) int8
+    ss = jax.lax.all_gather(scale, axis)
+    total = jnp.sum(qs.astype(jnp.float32) * ss, axis=0)
+    n, shape, dtype = meta
+    return total.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def compressed_psum_tree(tree, axis: str):
+    """psum_int8 over every leaf of a pytree (inside shard_map)."""
+    return jax.tree.map(lambda x: psum_int8(x, axis), tree)
+
+
+class ErrorFeedback:
+    """Residual accumulator: compress(g + e); e' = (g + e) - decompress."""
+
+    @staticmethod
+    def init(tree):
+        return jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), tree)
+
+    @staticmethod
+    def apply(grads, residual, compress_fn):
+        """Returns (compressed-then-decompressed grads, new residual)."""
+        corrected = jax.tree.map(
+            lambda g, e: g.astype(jnp.float32) + e, grads, residual)
+        rounded = jax.tree.map(
+            lambda x: dequantize_int8(*quantize_int8(x)), corrected)
+        transmitted = compress_fn(rounded)
+        new_resid = jax.tree.map(lambda c, r: c - r, corrected, rounded)
+        return transmitted, new_resid
+
+
+def roundtrip_int8(x):
+    """Quantize + dequantize (for tests and the EF convergence check)."""
+    return dequantize_int8(*quantize_int8(x))

@@ -1,0 +1,77 @@
+"""GPipe-style pipeline parallelism over a mesh axis (``pod`` by default).
+
+``pipeline_apply`` runs a homogeneous layer stack split into S stages across
+the axis: microbatches stream through stages with ``ppermute`` handoffs; the
+bubble is the standard (S-1)/(S-1+M) fraction. Params come stacked as
+(S, layers_per_stage, ...); inside shard_map each device holds one stage.
+
+This is the composable PP building block (optional — the default multi-pod
+config uses the pod axis for hierarchical data parallelism, DESIGN.md §6).
+Correctness is asserted against the sequential stack in tests (multi-device
+subprocess) for arbitrary microbatch counts.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(stage_fn, stacked_params, xs, mesh, axis: str = "pod",
+                   batch_axes: tuple = ()):
+    """stage_fn(stage_params, x) -> x, applied as an S-stage pipeline.
+
+    stacked_params leaves: (S, ...) — stage s uses leaf[s].
+    xs: (n_micro, B, ...) microbatched inputs (replicated over ``axis``,
+    batch possibly sharded over ``batch_axes``).
+    Returns (n_micro, B, ...) outputs (replicated over ``axis``).
+    """
+    S = mesh.shape[axis]
+
+    def local(params, xs_loc):
+        params = jax.tree.map(lambda a: a[0], params)  # this stage's slice
+        stage = jax.lax.axis_index(axis)
+        n_micro = xs_loc.shape[0]
+        T = n_micro + S - 1
+        perm = [(i, i + 1) for i in range(S - 1)]
+
+        def body(t, carry):
+            recv, out = carry
+            first = xs_loc[jnp.minimum(t, n_micro - 1)]
+            inp = jnp.where(stage == 0, first, recv)
+            y = stage_fn(params, inp)
+            nxt = jax.lax.ppermute(y, axis, perm)
+            widx = t - (S - 1)
+            upd = jax.lax.dynamic_update_index_in_dim(
+                out, y, jnp.maximum(widx, 0), 0)
+            out = jnp.where((stage == S - 1) & (widx >= 0), upd, out)
+            return (nxt, out)
+
+        recv0 = jnp.zeros_like(xs_loc[0])
+        out0 = jnp.zeros_like(xs_loc)
+        _, out = jax.lax.fori_loop(0, T, body, (recv0, out0))
+        # broadcast the last stage's outputs to every stage's copy
+        out = jax.lax.psum(
+            jnp.where(stage == S - 1, out, jnp.zeros_like(out)), axis)
+        return out
+
+    bspec = batch_axes if batch_axes else None
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis), P(None, bspec)),
+        out_specs=P(None, bspec),
+        check_vma=False,
+    )
+    return fn(stacked_params, xs)
+
+
+def split_stages(stacked_layers, n_stages: int):
+    """(L, ...) stacked layer params -> (S, L/S, ...) stage-stacked."""
+    def re(a):
+        L = a.shape[0]
+        assert L % n_stages == 0, f"{L} layers across {n_stages} stages"
+        return a.reshape(n_stages, L // n_stages, *a.shape[1:])
+
+    return jax.tree.map(re, stacked_layers)

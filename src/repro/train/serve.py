@@ -1,0 +1,53 @@
+"""Serving: prefill + single-token decode step + sampling.
+
+``serve_step`` is the function lowered for the ``decode_*`` / ``long_*``
+dry-run cells: one new token against a KV cache (or SSM state) of
+``seq_len``. The decode state is donated so cache updates are in-place.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_serve_step(model, sample: str = "greedy", temperature: float = 1.0):
+    """serve_step(params, state, tokens, rng) -> (next_tokens, logits, state).
+
+    ``tokens``: (B,) int32 current tokens; state from prefill or
+    decode_state_specs.
+    """
+
+    def serve_step(params, state, tokens, rng):
+        logits, state = model.decode_step(params, state, tokens)
+        if sample == "greedy":
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+            nxt = nxt.astype(jnp.int32)
+        return nxt, logits, state
+
+    return serve_step
+
+
+def make_prefill(model):
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill
+
+
+def generate(model, params, batch, steps: int, rng=None, temperature=0.0):
+    """Eager helper: prefill then decode ``steps`` tokens (small-scale use)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    serve_step = jax.jit(make_serve_step(
+        model, "greedy" if temperature == 0 else "categorical", temperature))
+    S = batch["tokens"].shape[1]
+    logits, state = jax.jit(
+        lambda p, b: model.prefill(p, b, pad_to=S + steps + 8))(params, batch)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    for _ in range(steps - 1):
+        rng, k = jax.random.split(rng)
+        tok, logits, state = serve_step(params, state, tok, k)
+        out.append(tok)
+    return jnp.stack(out, axis=1)  # (B, steps)

@@ -1,0 +1,64 @@
+"""Training step factory: value_and_grad + microbatch gradient accumulation
++ AdamW, as a single jittable function.
+
+Gradient accumulation (scan over microbatches) bounds per-layer activation
+memory: at minitron-8b train_4k on the single-pod mesh, full-batch remat
+residuals are ~16 GB/device (doesn't fit v5e HBM); 4 microbatches bring it
+to ~4 GB. Collectives stay O(1) per step (grads reduced once).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+
+
+def make_train_step(model, opt_cfg: adamw.AdamWConfig,
+                    num_microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). ``batch`` leaves have leading dim global_batch; it must be
+    divisible by num_microbatches."""
+
+    def loss_fn(p, mb):
+        return model.loss(p, mb)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            n = num_microbatches
+
+            def split(x):
+                b = x.shape[0]
+                assert b % n == 0, f"batch {b} % microbatches {n} != 0"
+                return jnp.moveaxis(
+                    x.reshape(b // n, n, *x.shape[1:]), 1, 0)
+
+            mbs = jax.tree.map(split, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+
+            def body(carry, mb):
+                acc, lsum = carry
+                (l, _), g = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                return (acc, lsum + l), None
+
+            (grads, lsum), _ = jax.lax.scan(body, (g0, jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = lsum / n
+            metrics = {"ce": loss}
+        params, opt_state, om = adamw.apply_update(params, grads, opt_state,
+                                                   opt_cfg)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step

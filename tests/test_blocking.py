@@ -1,0 +1,50 @@
+"""§5.1.1 blocking-instruction discovery."""
+from repro.core.isa import TEST_ISA
+
+
+def test_blocking_covers_ground_truth_combos(skl_blocking):
+    combos = {frozenset(pc) for pc in skl_blocking.instrs}
+    expected = {frozenset(x) for x in
+                ("0156", "06", "01", "015", "23", "237", "4", "5", "1", "0",
+                 "15")}
+    assert expected <= combos
+
+
+def test_blocking_instructions_are_single_uop(skl_machine, skl_blocking):
+    from repro.core.machine import total_uops
+
+    for pc, name in skl_blocking.instrs.items():
+        if name == "MOV_M64_R64":  # the 2-μop store special case
+            continue
+        assert abs(total_uops(skl_machine, TEST_ISA[name]) - 1) < 0.1, name
+
+
+def test_excluded_classes_never_selected(skl_blocking):
+    banned = {"CPUID", "RDMSR", "LFENCE", "NOP", "PAUSE", "JMP_R64", "DIV_R64",
+              "DIVPS_X_X"}
+    assert banned.isdisjoint(set(skl_blocking.instrs.values()))
+
+
+def test_throughput_selection_avoids_flag_chained(skl_blocking):
+    """For p06 the candidates include flag-readers whose instances chain
+    (ADC/SBB/shifts); the throughput criterion must avoid them."""
+    p06 = skl_blocking.instrs[frozenset("06")]
+    assert p06 in ("SETC_R8", "SAHF", "CMOVBE_R64_R64")
+
+
+def test_store_ports_use_mov_special_case(skl_blocking):
+    assert skl_blocking.instrs[frozenset("4")] == "MOV_M64_R64"
+    assert skl_blocking.instrs[frozenset("237")] == "MOV_M64_R64"
+
+
+def test_sse_avx_separate_sets(skl_machine):
+    from repro.core.blocking import find_blocking_instructions
+
+    sse = find_blocking_instructions(skl_machine, TEST_ISA,
+                                     extensions=("BASE", "SSE"))
+    avx = find_blocking_instructions(skl_machine, TEST_ISA,
+                                     extensions=("BASE", "AVX"))
+    sse_names = set(sse.instrs.values())
+    avx_names = set(avx.instrs.values())
+    assert not any(TEST_ISA[n].extension == "AVX" for n in sse_names)
+    assert not any(TEST_ISA[n].extension == "SSE" for n in avx_names)

@@ -1,0 +1,62 @@
+"""HLO collective-statistics parser (feeds the roofline collective term)."""
+import pytest
+
+from repro.analysis.hlo_stats import parse_collectives
+
+SAMPLE = """
+HloModule jit_train_step
+%fused (p0: f32[16,4096]) -> f32[16,4096] {
+  ROOT %add = f32[16,4096] add(%p0, %p0)
+}
+ENTRY %main {
+  %ag = bf16[64,4096,256]{2,1,0} all-gather(bf16[4,4096,256]{2,1,0} %x), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  %ar = f32[4096,4096]{1,0} all-reduce(f32[4096,4096]{1,0} %y), replica_groups=[16,16]<=[256]T(1,0), to_apply=%sum
+  %rs = f32[256,4096]{1,0} reduce-scatter(f32[4096,4096]{1,0} %z), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}
+  %a2a = bf16[8,512]{1,0} all-to-all(bf16[8,512]{1,0} %w), replica_groups=[32,8]<=[256]
+  %cp = f32[128,128]{1,0} collective-permute(f32[128,128]{1,0} %v), source_target_pairs={{0,1},{1,2}}
+  %ags = (f32[16,16]{1,0}, f32[16,16]{1,0}) all-gather-start(f32[4,16] %q, f32[4,16] %r), replica_groups={{0,1,2,3}}, dimensions={0}
+  %agd = f32[16,16]{1,0} all-gather-done(%ags)
+}
+"""
+
+
+def test_counts():
+    st = parse_collectives(SAMPLE)
+    assert st.count["all-gather"] == 2  # plain + -start (done not counted)
+    assert st.count["all-reduce"] == 1
+    assert st.count["reduce-scatter"] == 1
+    assert st.count["all-to-all"] == 1
+    assert st.count["collective-permute"] == 1
+
+
+def test_result_bytes_and_groups():
+    st = parse_collectives(SAMPLE)
+    ag = 64 * 4096 * 256 * 2
+    assert st.result_bytes["all-gather"] == ag + 2 * 16 * 16 * 4
+    ar = 4096 * 4096 * 4
+    # ring all-reduce wire: 2 * R * (g-1)/g, iota groups [16,16] -> g=16
+    assert st.wire_bytes["all-reduce"] == pytest.approx(2 * ar * 15 / 16)
+    # reduce-scatter: shard result R, wire = R*(g-1), g=16
+    rs = 256 * 4096 * 4
+    assert st.wire_bytes["reduce-scatter"] == pytest.approx(rs * 15)
+    # all-gather explicit groups of 4: wire = R*(g-1)/g
+    assert st.wire_bytes["all-gather"] == pytest.approx(
+        ag * 3 / 4 + (2 * 16 * 16 * 4) * 3 / 4)
+
+
+def test_permute_and_a2a():
+    st = parse_collectives(SAMPLE)
+    assert st.wire_bytes["collective-permute"] == 128 * 128 * 4
+    a2a = 8 * 512 * 2
+    assert st.wire_bytes["all-to-all"] == pytest.approx(a2a * 7 / 8)
+
+
+def test_total():
+    st = parse_collectives(SAMPLE)
+    assert st.total_wire_bytes == pytest.approx(sum(st.wire_bytes.values()))
+    assert st.total_result_bytes == sum(st.result_bytes.values())
+
+
+def test_ignores_non_collective_lines():
+    st = parse_collectives("%add = f32[4] add(%a, %b)\n")
+    assert not st.count

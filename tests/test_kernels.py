@@ -1,0 +1,123 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), swept over
+shapes/dtypes as the assignment requires."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.microbench import BLOCKERS
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def rand(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.5).astype(dtype)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Sk,D", [
+    (1, 2, 2, 64, 64, 16),
+    (2, 4, 2, 128, 128, 32),   # GQA group 2
+    (1, 6, 2, 96, 96, 16),     # group 3, non-pow2 seq blocks
+    (2, 2, 1, 64, 128, 8),     # cross-length (prefill-style)
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_reference(B, Hq, Hkv, Sq, Sk, D, causal,
+                                           dtype):
+    if causal and Sq != Sk:
+        pytest.skip("causal requires square layout here")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(ks[0], (B, Hq, Sq, D), dtype)
+    k = rand(ks[1], (B, Hkv, Sk, D), dtype)
+    v = rand(ks[2], (B, Hkv, Sk, D), dtype)
+    out = flash_attention_fwd(q, k, v, causal=causal, block_q=32, block_k=32,
+                              interpret=True)
+    want = ref.reference_attention(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("b,s,h,g,p,n,chunk", [
+    (1, 64, 2, 1, 16, 16, 16),
+    (2, 128, 4, 2, 32, 16, 32),
+    (1, 96, 2, 2, 8, 8, 16),   # uneven chunk count
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_matches_reference(b, s, h, g, p, n, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    x = rand(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(rand(ks[1], (b, s, h), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = rand(ks[3], (b, s, g, n), dtype)
+    C = rand(ks[0], (b, s, g, n), dtype)
+    y, st = ssd_scan(x, dt, A, B, C, chunk, interpret=True)
+    y_ref, st_ref = ref.reference_ssd(x, dt, A, B, C, chunk)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               atol=tol, rtol=tol)
+
+
+def test_ssd_chunked_equals_sequential():
+    """The chunked SSD algorithm (model + kernel path) equals the plain
+    recurrence — the state-space-duality identity itself."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    b, s, h, g, p, n = 2, 64, 4, 2, 8, 16
+    x = rand(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(rand(ks[1], (b, s, h), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = rand(ks[3], (b, s, g, n), jnp.float32)
+    C = rand(ks[4], (b, s, g, n), jnp.float32)
+    y1, st1 = ref.reference_ssd(x, dt, A, B, C, chunk=16)
+    y2, st2 = ref.reference_ssd_sequential(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-3,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st1), np.asarray(st2), atol=1e-3,
+                               rtol=1e-3)
+
+
+@pytest.mark.parametrize("rows,d", [(32, 64), (100, 128), (7, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_reference(rows, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    x = rand(ks[0], (rows, d), dtype)
+    w = 1 + 0.1 * rand(ks[1], (d,), jnp.float32)
+    out = rmsnorm(x, w, interpret=True, block_rows=16)
+    want = ref.reference_rmsnorm(x, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_flash_attention_custom_vjp_gradients():
+    from repro.kernels.ops import flash_attention
+
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = rand(ks[0], (1, 2, 32, 16), jnp.float32)
+    k = rand(ks[1], (1, 2, 32, 16), jnp.float32)
+    v = rand(ks[2], (1, 2, 32, 16), jnp.float32)
+
+    def f(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, True, 16, 16) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.reference_attention(q, k, v, causal=True) ** 2)
+
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                                   rtol=1e-4)
+
+
+@pytest.mark.parametrize("name", sorted(BLOCKERS))
+def test_blocking_kernels_run(name):
+    out = BLOCKERS[name](interpret=True)
+    assert np.isfinite(np.asarray(out, np.float32)).all()

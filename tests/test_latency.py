@@ -1,0 +1,153 @@
+"""Per-operand-pair latency (§4.1, §5.2) against planted ground truths,
+including every §7.3 case study."""
+import pytest
+
+from repro.core.isa import TEST_ISA
+from repro.core.latency import LatencyAnalyzer
+
+
+@pytest.fixture(scope="module")
+def skl(skl_machine):
+    return LatencyAnalyzer(skl_machine, TEST_ISA)
+
+
+@pytest.fixture(scope="module")
+def hsw(hsw_machine):
+    return LatencyAnalyzer(hsw_machine, TEST_ISA)
+
+
+@pytest.fixture(scope="module")
+def snb(snb_machine):
+    return LatencyAnalyzer(snb_machine, TEST_ISA)
+
+
+def test_bootstrap_chain_latencies(skl):
+    assert skl.lat_movsx == pytest.approx(1.0, abs=0.05)
+    assert skl.lat_xor == pytest.approx(1.0, abs=0.05)
+    assert skl.lat_setc == pytest.approx(1.0, abs=0.1)
+    for v in skl.vec_chains.values():
+        assert v == pytest.approx(1.0, abs=0.05)
+
+
+def test_alu_all_pairs(skl):
+    r = skl.analyze("ADD_R64_R64")
+    for pair in [("op1", "op1"), ("op2", "op1"), ("op1", "flags"),
+                 ("op2", "flags")]:
+        assert r.get(*pair).value == pytest.approx(1.0, abs=0.05), pair
+
+
+def test_aesdec_sandy_bridge(snb):
+    """§7.3.1 flagship: lat(xmm1,xmm1)=8 but lat(xmm2,xmm1)=1 — invisible
+    to single-scalar latency definitions."""
+    r = snb.analyze("AESDEC_X_X")
+    assert r.get("op1", "op1").value == pytest.approx(8.0, abs=0.1)
+    assert r.get("op2", "op1").value == pytest.approx(1.0, abs=0.1)
+
+
+def test_aesdec_haswell_uniform(hsw):
+    """On Haswell the same instruction is 1 μop with uniform latency 7."""
+    r = hsw.analyze("AESDEC_X_X")
+    assert r.get("op1", "op1").value == pytest.approx(7.0, abs=0.1)
+    assert r.get("op2", "op1").value == pytest.approx(7.0, abs=0.1)
+
+
+def test_aesdec_memory_variant_upper_bound(snb):
+    """§7.3.1: the memory variant keeps the 8-cycle reg pair; the mem->reg
+    pair is reported as an upper bound well below naive load+lat sums."""
+    r = snb.analyze("AESDEC_X_M")
+    assert r.get("op1", "op1").value == pytest.approx(8.0, abs=0.1)
+    mem = r.get("mem", "op1")
+    assert mem is not None and mem.kind == "upper_bound"
+    assert mem.value <= 8.0
+
+
+def test_shld_skylake_same_register(skl):
+    """§7.3.2: 3 cycles with distinct registers, 1 with the same register —
+    explains Granlund/AIDA64 (1) vs manual/Fog (3)."""
+    r = skl.analyze("SHLD_R64_R64_I8")
+    assert r.get("op1", "op1").value == pytest.approx(3.0, abs=0.05)
+    e = r.get("op2", "op1")
+    assert e.value == pytest.approx(3.0, abs=0.05)
+    assert e.same_reg == pytest.approx(1.0, abs=0.05)
+
+
+def test_shld_nehalem_like_split(snb):
+    """§7.3.2: lat(op1,op1)=3 (Fog's number) vs lat(op2,op1)=4 (manual's) on
+    the older core — both are right, for different pairs."""
+    r = snb.analyze("SHLD_R64_R64_I8")
+    assert r.get("op1", "op1").value == pytest.approx(3.0, abs=0.05)
+    assert r.get("op2", "op1").value == pytest.approx(4.0, abs=0.05)
+
+
+def test_mul_split_destinations(skl):
+    """§7.3.5 multi-latency: low result after 3 cycles, high half after 4."""
+    r = skl.analyze("MUL_R64")
+    assert r.get("op2", "op1").value == pytest.approx(3.0, abs=0.05)
+    assert r.get("op2", "hi").value == pytest.approx(4.0, abs=0.05)
+
+
+def test_flags_producer_consumer(skl):
+    r = skl.analyze("ADC_R64_R64")
+    assert r.get("flags", "op1").value == pytest.approx(1.0, abs=0.1)
+    assert r.get("flags", "flags").value == pytest.approx(1.0, abs=0.1)
+    r2 = skl.analyze("CMC")
+    assert r2.get("flags", "flags").value == pytest.approx(1.0, abs=0.05)
+
+
+def test_load_latency(skl, skl_machine):
+    r = skl.analyze("MOV_R64_M64")
+    assert r.get("mem", "op1").value == pytest.approx(
+        skl_machine.uarch.load_latency, abs=0.1)
+
+
+def test_load_op_compound(skl, skl_machine):
+    r = skl.analyze("ADD_R64_M64")
+    assert r.get("mem", "op1").value == pytest.approx(
+        skl_machine.uarch.load_latency + 1, abs=0.1)
+    assert r.get("op1", "op1").value == pytest.approx(1.0, abs=0.05)
+
+
+def test_store_roundtrip_reports_forwarding(skl, skl_machine):
+    """§5.2.4: the round trip reflects store-to-load forwarding, and is
+    flagged as a round trip, not a latency."""
+    r = skl.analyze("MOV_M64_R64")
+    e = r.get("op1", "mem")
+    assert e.kind == "roundtrip"
+    assert e.value <= skl_machine.uarch.store_forward_latency + 2
+
+
+def test_divider_value_dependence(skl):
+    r = skl.analyze("DIV_R64")
+    e = r.get("op1", "op1")
+    assert e.value == pytest.approx(23.0, abs=0.2)
+    assert e.high_value is not None and e.high_value > e.value
+
+
+def test_cross_type_upper_bound(skl):
+    r = skl.analyze("MOVD_X_R64")  # gpr -> vec
+    e = r.get("op2", "op1")
+    assert e.kind == "upper_bound"
+    # true lat 2; composed with 2-cycle movers: min composite 4, minus 1 = 3
+    assert 2.0 <= e.value <= 3.5
+
+
+def test_zero_idiom_same_reg_latency(skl):
+    r = skl.analyze("XOR_R64_R64")
+    e = r.get("op2", "op1")
+    assert e.value == pytest.approx(1.0, abs=0.05)
+    assert e.same_reg == pytest.approx(0.0, abs=0.05)  # dependency broken
+
+
+def test_pcmpgtq_undocumented_zero_idiom(skl):
+    """§7.3.6: PCMPGT* break dependencies — same-register cycles drop to the
+    port-bound floor (~1/3 for a p015 μop), far below the 1-cycle latency.
+    Unlike XOR it still occupies an execution port."""
+    r = skl.analyze("PCMPGTQ_X_X")
+    e = r.get("op2", "op1")
+    assert e.value == pytest.approx(1.0, abs=0.05)
+    assert e.same_reg < 0.5
+
+
+def test_max_latency(skl):
+    assert skl.analyze("MUL_R64").max_latency() == 4
+    assert skl.analyze("ADD_R64_R64").max_latency() == 1

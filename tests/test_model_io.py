@@ -1,0 +1,46 @@
+"""Machine-readable output (§6.4): XML/JSON round trips."""
+import json
+
+from repro.core import model_io
+from repro.core.isa import TEST_ISA
+
+
+def test_xml_roundtrip(skl_model):
+    xml = model_io.to_xml(skl_model, TEST_ISA)
+    m2 = model_io.load_xml(xml)
+    assert m2.uarch == skl_model.uarch
+    assert set(m2.instructions) == set(skl_model.instructions)
+    for name, a in skl_model.instructions.items():
+        b = m2[name]
+        assert a.port_usage.usage == b.port_usage.usage, name
+        assert abs(a.throughput.measured - b.throughput.measured) < 1e-5
+        if a.throughput.computed_from_ports is not None:
+            assert abs(a.throughput.computed_from_ports -
+                       b.throughput.computed_from_ports) < 1e-5
+        for pair, e in a.latency.entries.items():
+            e2 = b.latency.entries[pair]
+            assert abs(e.value - e2.value) < 1e-5, (name, pair)
+            assert e.kind == e2.kind
+            if e.same_reg is not None:
+                assert abs(e.same_reg - e2.same_reg) < 1e-5
+
+
+def test_xml_contains_operand_metadata(skl_model):
+    xml = model_io.to_xml(skl_model, TEST_ISA)
+    assert '<operand name="op1" type="gpr"' in xml
+    assert 'implicit="1"' in xml  # flags operands
+    assert "blockingInstructions" in xml
+
+
+def test_json_export(skl_model):
+    d = json.loads(model_io.to_json(skl_model))
+    assert d["uarch"] == skl_model.uarch
+    rec = d["instructions"]["ADD_R64_R64"]
+    assert rec["ports"] == "1*p0156"
+    assert rec["latency"]["op2->op1"]["cycles"] == 1.0
+
+
+def test_blocking_table_exported(skl_model):
+    xml = model_io.to_xml(skl_model, TEST_ISA)
+    m2 = model_io.load_xml(xml)
+    assert m2.blocking == skl_model.blocking

@@ -1,0 +1,58 @@
+"""Algorithm 1 (§5.1.2) against planted ground truths."""
+import pytest
+
+from repro.core.blocking import find_blocking_instructions
+from repro.core.isa import TEST_ISA
+from repro.core.machine import isolation_ports
+from repro.core.port_usage import infer_port_usage
+
+
+def pu(machine, blocking, name, max_lat=8):
+    return infer_port_usage(machine, TEST_ISA, name, blocking, max_lat)
+
+
+def test_simple_alu(skl_machine, skl_blocking):
+    r = pu(skl_machine, skl_blocking, "ADD_R64_R64")
+    assert r.usage == {frozenset("0156"): 1}
+    assert r.notation() == "1*p0156"
+
+
+def test_movq2dq_isolation_fallacy(skl_machine, skl_blocking):
+    """§7.3.3: isolation shows 1 μop on p0 + 0.5 on p1/p5 — the naive
+    conclusion 1*p0+1*p15 is wrong; Algorithm 1 finds 1*p0+1*p015."""
+    iso = isolation_ports(skl_machine, TEST_ISA["MOVQ2DQ_X_X"])
+    assert iso["0"] == pytest.approx(1.0, abs=0.1)
+    assert iso.get("1", 0) == pytest.approx(0.5, abs=0.15)
+    assert iso.get("5", 0) == pytest.approx(0.5, abs=0.15)
+    r = pu(skl_machine, skl_blocking, "MOVQ2DQ_X_X")
+    assert r.usage == {frozenset("0"): 1, frozenset("015"): 1}
+
+
+def test_adc_haswell(hsw_machine):
+    """§5.1: isolation suggests 2*p0156; truth is 1*p0156+1*p06."""
+    blocking = find_blocking_instructions(hsw_machine, TEST_ISA)
+    r = pu(hsw_machine, blocking, "ADC_R64_R64")
+    assert r.usage == {frozenset("0156"): 1, frozenset("06"): 1}
+
+
+def test_multi_uop_with_memory(skl_machine, skl_blocking):
+    r = pu(skl_machine, skl_blocking, "ADD_R64_M64")
+    assert r.usage == {frozenset("23"): 1, frozenset("0156"): 1}
+
+
+def test_store_instruction(skl_machine, skl_blocking):
+    r = pu(skl_machine, skl_blocking, "MOV_M64_R64")
+    assert r.usage == {frozenset("237"): 1, frozenset("4"): 1}
+
+
+def test_total_uops_consistency(skl_machine, skl_blocking):
+    for name in ("ADD_R64_R64", "MUL_R64", "MOVQ2DQ_X_X", "BSWAP_R64"):
+        r = pu(skl_machine, skl_blocking, name)
+        assert sum(r.usage.values()) == round(r.total_uops), name
+
+
+def test_notation_sorted():
+    from repro.core.port_usage import PortUsage
+
+    p = PortUsage(usage={frozenset("23"): 1, frozenset("015"): 3})
+    assert p.notation() == "3*p015+1*p23"

@@ -1,0 +1,75 @@
+"""The TPU adaptation, end to end on the simulated TPU-unit core:
+ports = {MXU, VPU, XLU, LSU, SFU}, instructions = kernel-level tile ops.
+Algorithm 1 + the latency chains recover the hidden unit occupancy of fused
+kernels (flash-attention tile, SSD chunk tile, ...) exactly — the claim
+DESIGN.md §2 makes about transferring the paper's method to TPUs."""
+import pytest
+
+from repro.core.blocking import find_blocking_instructions
+from repro.core.latency import LatencyAnalyzer
+from repro.core.machine import isolation_ports
+from repro.core.port_usage import infer_port_usage
+from repro.core.simulator import SimMachine
+from repro.core.uarch import make_tpu_sim
+
+
+@pytest.fixture(scope="module")
+def tpu():
+    ua, isa, truth = make_tpu_sim()
+    return SimMachine(ua, isa), isa, truth
+
+
+def test_blocking_kernels_discovered(tpu):
+    """Each unit's saturator is discovered as its blocking instruction —
+    the simulated counterpart of kernels/microbench.py."""
+    m, isa, _ = tpu
+    blk = find_blocking_instructions(m, isa, extensions=("BASE",))
+    got = {next(iter(pc)): name for pc, name in blk.instrs.items()
+           if len(pc) == 1}
+    assert got["MXU"] == "MATMUL_TILE"
+    assert got["VPU"] == "FMA_TILE"
+    assert got["LSU"] == "COPY_TILE"
+    assert got["SFU"] == "EXP_TILE"
+    assert got["XLU"] == "TRANSPOSE_TILE"
+
+
+@pytest.mark.parametrize("kernel", ["FLASH_ATTN_TILE", "SSD_CHUNK_TILE",
+                                    "SOFTMAX_TILE", "RMSNORM_TILE",
+                                    "GATHER_TILE"])
+def test_unit_occupancy_recovered(tpu, kernel):
+    """Algorithm 1 recovers the exact unit-occupancy multiset of every
+    fused kernel op (e.g. flash-attn tile = 2*MXU + 1*VPU + 1*SFU + 1*LSU)."""
+    m, isa, truth = tpu
+    blk = find_blocking_instructions(m, isa, extensions=("BASE",))
+    pu = infer_port_usage(m, isa, kernel, blk, max_latency=12)
+    assert pu.usage == truth[kernel], (pu.usage, truth[kernel])
+
+
+def test_flash_attn_tile_composition(tpu):
+    m, isa, truth = tpu
+    blk = find_blocking_instructions(m, isa, extensions=("BASE",))
+    pu = infer_port_usage(m, isa, "FLASH_ATTN_TILE", blk, max_latency=12)
+    assert pu.usage == {frozenset(["MXU"]): 2, frozenset(["VPU"]): 1,
+                        frozenset(["SFU"]): 1, frozenset(["LSU"]): 1}
+
+
+def test_isolation_is_unambiguous_here_but_method_matches(tpu):
+    """On single-port units isolation already identifies the ports; the
+    point is the *count* attribution for multi-μop fused kernels."""
+    m, isa, _ = tpu
+    iso = isolation_ports(m, isa["SSD_CHUNK_TILE"])
+    assert iso["MXU"] == pytest.approx(2.0, abs=0.1)
+    assert iso["LSU"] == pytest.approx(1.0, abs=0.1)
+
+
+def test_kernel_latency_chain(tpu):
+    """Pipeline latency through a fused kernel: flash tile = 4+2+3+2+1."""
+    m, isa, _ = tpu
+    from repro.core.machine import measure
+    from repro.core.simulator import Instr
+
+    # self-chain: op1 -> op2 of the next instance
+    seq = [Instr("FLASH_ATTN_TILE", {"op1": "R0", "op2": "R1"}),
+           Instr("FLASH_ATTN_TILE", {"op1": "R1", "op2": "R0"})]
+    c = measure(m, seq)
+    assert c.cycles / 2 == pytest.approx(12.0, abs=0.1)
