@@ -47,9 +47,10 @@ def _timed(f):
 
 
 def table1_characterization():
-    """Table 1 analogue: characterize the full μISA per simulated uarch and
-    compare against the legacy (IACA-like, bug-planted) analyzer."""
-    from repro.core.characterize import characterize
+    """Table 1 analogue: one Campaign characterizes the full μISA on all
+    simulated uarches concurrently; compare against the legacy (IACA-like,
+    bug-planted) analyzer."""
+    from repro.core.engine import Campaign
     from repro.core.isa import TEST_ISA
     from repro.core.simulator import SimMachine
     from repro.core.uarch import SIM_UARCHES
@@ -61,12 +62,12 @@ def table1_characterization():
         "BSWAP_R32": {frozenset("15"): 2},             # variant confusion
         "SAHF": {frozenset("0156"): 1},                # extra ports (IACA>=2.2)
     }
+    machines = [SimMachine(ua, TEST_ISA) for ua in SIM_UARCHES.values()]
+    res = Campaign().run(machines, TEST_ISA)
     print("\n== Table 1: characterized variants & legacy agreement ==")
     print(f"{'uarch':10s} {'#instr':>6s} {'runtime_s':>9s} "
-          f"{'uops_agree%':>11s} {'ports_agree%':>12s}")
-    for name, ua in SIM_UARCHES.items():
-        m = SimMachine(ua, TEST_ISA)
-        model, us = _timed(lambda m=m: characterize(m, TEST_ISA))
+          f"{'uops_agree%':>11s} {'ports_agree%':>12s} {'cache_hit%':>10s}")
+    for name, model in res.models.items():
         n = len(model.instructions)
         uops_ok = ports_ok = total = 0
         for iname, im in model.instructions.items():
@@ -75,9 +76,16 @@ def table1_characterization():
             total += 1
             uops_ok += int(round(im.uops) == legacy_uops)
             ports_ok += int(im.port_usage.usage == legacy_usage)
-        print(f"{name:10s} {n:6d} {us / 1e6:9.1f} "
-              f"{100 * uops_ok / total:11.2f} {100 * ports_ok / total:12.2f}")
-        emit(f"table1_{name}", us, f"instr={n}")
+        print(f"{name:10s} {n:6d} {res.uarch_seconds[name]:9.1f} "
+              f"{100 * uops_ok / total:11.2f} {100 * ports_ok / total:12.2f} "
+              f"{100 * res.stats[name]['hit_rate']:10.1f}")
+        emit(f"table1_{name}", res.uarch_seconds[name] * 1e6, f"instr={n}")
+    phases = {k: round(v, 1) for k, v in
+              sorted(res.phase_seconds[machines[0].name].items())}
+    print(f"(campaign wall {res.wall_seconds:.1f}s across "
+          f"{len(machines)} uarches; phase seconds: {phases})")
+    emit("table1_campaign", res.wall_seconds * 1e6,
+         f"hit_rate={res.hit_rate:.3f}")
 
 
 def table_legacy_versions():
@@ -353,6 +361,48 @@ def bench_kernel_contention():
     emit("bench_kernel_contention", us)
 
 
+CAMPAIGN_STATS: dict = {}
+
+
+def bench_campaign_cache():
+    """Measurement-engine cache: cold vs warm campaign over all uarches.
+
+    The warm pass re-runs the identical campaign against the same machines
+    (whose engines now hold every result), standing in for an incremental
+    ``characterize()`` re-run from a persisted cache."""
+    import time as _time
+
+    from repro.core.engine import Campaign
+    from repro.core.isa import TEST_ISA
+    from repro.core.simulator import SimMachine
+    from repro.core.uarch import SIM_UARCHES
+
+    machines = [SimMachine(ua, TEST_ISA) for ua in SIM_UARCHES.values()]
+    camp = Campaign()
+    t0 = _time.perf_counter()
+    cold = camp.run(machines, TEST_ISA)
+    cold_s = _time.perf_counter() - t0
+    t0 = _time.perf_counter()
+    warm = camp.run(machines, TEST_ISA)
+    warm_s = _time.perf_counter() - t0
+    speedup = cold_s / max(warm_s, 1e-9)
+    CAMPAIGN_STATS.update({
+        "cold_seconds": round(cold_s, 3), "warm_seconds": round(warm_s, 3),
+        "speedup_warm_vs_cold": round(speedup, 2),
+        "cold_hit_rate": round(cold.hit_rate, 4),
+        "warm_hit_rate": round(warm.hit_rate, 4),
+        "per_uarch": {n: cold.stats[n] for n in cold.stats},
+    })
+    print("\n== measurement-engine cache: cold vs warm campaign ==")
+    print(f"  cold {cold_s:.2f}s (hit rate {100 * cold.hit_rate:.1f}%)  "
+          f"warm {warm_s:.2f}s (hit rate {100 * warm.hit_rate:.1f}%)  "
+          f"speedup {speedup:.1f}x")
+    emit("bench_campaign_cold", cold_s * 1e6,
+         f"hit_rate={cold.hit_rate:.3f}")
+    emit("bench_campaign_warm", warm_s * 1e6,
+         f"speedup={speedup:.1f}x")
+
+
 def table_roofline():
     from repro.analysis.roofline import full_table, markdown_table
 
@@ -367,6 +417,8 @@ def table_roofline():
 
 
 def main() -> None:
+    import json
+
     print("name,us_per_call,derived")
     table1_characterization()
     table_legacy_versions()
@@ -378,10 +430,22 @@ def main() -> None:
     table_zero_idioms()
     bench_lp()
     bench_simulator()
+    bench_campaign_cache()
     bench_hardware_corpus()
     bench_kernel_contention()
     table_roofline()
     print(f"\n{len(ROWS)} benchmark rows emitted.")
+
+    out = Path(__file__).resolve().parents[1] / "experiments"
+    out.mkdir(parents=True, exist_ok=True)
+    payload = {
+        "rows": [{"name": n, "us_per_call": round(us, 2), "derived": d}
+                 for n, us, d in ROWS],
+        "campaign_cache": CAMPAIGN_STATS,
+    }
+    (out / "benchmarks.json").write_text(json.dumps(payload, indent=1))
+    print(f"JSON results (incl. cache hit-rate / speedup) -> "
+          f"{out / 'benchmarks.json'}")
 
 
 if __name__ == "__main__":

@@ -15,7 +15,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.core import model_io
-from repro.core.characterize import characterize
+from repro.core.engine import Campaign
 from repro.core.isa import TEST_ISA
 from repro.core.machine import measure
 from repro.core.predictor import LegacyAnalyzer, predict
@@ -26,7 +26,13 @@ machine = SimMachine(SIM_SKL, TEST_ISA)
 names = ["ADD_R64_R64", "IMUL_R64_R64", "ADC_R64_R64", "MOVQ2DQ_X_X",
          "SHLD_R64_R64_I8", "CMC", "MOV_R64_M64", "PSHUFD_X_X"]
 print(f"characterizing {len(names)} instruction variants on {machine.name}…")
-model = characterize(machine, TEST_ISA, names)
+campaign = Campaign(instr_names=names)
+result = campaign.run([machine], TEST_ISA)
+model = result.models[machine.name]
+stats = result.stats[machine.name]
+print(f"  {stats['executions']} unique experiments executed, "
+      f"{100 * stats['hit_rate']:.0f}% of {stats['requests']} requests "
+      f"served from cache/dedup")
 
 for n in names:
     im = model[n]

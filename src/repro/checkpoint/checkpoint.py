@@ -2,7 +2,9 @@
 restore (restore onto a different data-parallel shard count).
 
 Format: a directory ``<step>.ckpt/`` containing ``manifest.json`` plus one
-zstd-compressed binary file per (leaf, chunk). Leaves are chunked along
+compressed binary file per (leaf, chunk) — zstd when the ``zstandard``
+wheel is available, zlib otherwise (the codec is recorded in the manifest,
+so either writer's checkpoints restore anywhere). Leaves are chunked along
 axis 0 (the FSDP/data-sharded axis), so a checkpoint written with N chunks
 can be restored by M != N workers — each worker re-slices to its own shard
 (elastic rescale). Writes go to ``.tmp`` and are renamed only after fsync:
@@ -14,11 +16,34 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from pathlib import Path
 
 import jax
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ModuleNotFoundError:  # optional dep: fall back to stdlib zlib
+    zstd = None
+
+DEFAULT_CODEC = "zstd" if zstd is not None else "zlib"
+
+
+def _compress(data: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        return zstd.ZstdCompressor(level=3).compress(data)
+    return zlib.compress(data, 3)
+
+
+def _decompress(data: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        if zstd is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but the 'zstandard' "
+                "package is not installed")
+        return zstd.ZstdDecompressor().decompress(data)
+    return zlib.decompress(data)
 
 
 def _flatten(tree):
@@ -38,8 +63,8 @@ def save_checkpoint(directory, step: int, tree, *, chunks: int = 1,
         shutil.rmtree(tmp)
     tmp.mkdir(parents=True)
     leaves, treedef = _flatten(tree)
-    cctx = zstd.ZstdCompressor(level=3)
-    manifest = {"step": step, "metadata": metadata or {},
+    codec = DEFAULT_CODEC
+    manifest = {"step": step, "metadata": metadata or {}, "codec": codec,
                 "treedef": str(treedef), "leaves": []}
     for i, leaf in enumerate(leaves):
         arr = np.asarray(leaf)
@@ -52,7 +77,7 @@ def save_checkpoint(directory, step: int, tree, *, chunks: int = 1,
             part = arr[c * arr.shape[0] // n_chunks:
                        (c + 1) * arr.shape[0] // n_chunks] if n_chunks > 1 else arr
             fname = f"leaf{i:05d}_{c:03d}.zst"
-            data = cctx.compress(part.tobytes())
+            data = _compress(part.tobytes(), codec)
             (tmp / fname).write_bytes(data)
             rec["files"].append(fname)
         manifest["leaves"].append(rec)
@@ -73,15 +98,15 @@ def restore_checkpoint(path, like_tree, *, shard_index: int = 0,
     need not match num_shards). Returns (step, tree, metadata)."""
     path = Path(path)
     manifest = json.loads((path / "manifest.json").read_text())
+    codec = manifest.get("codec", "zstd")  # pre-codec checkpoints were zstd
     like_leaves, treedef = _flatten(like_tree)
-    dctx = zstd.ZstdDecompressor()
     out = []
     for rec, like in zip(manifest["leaves"], like_leaves):
         dtype = (jax.numpy.bfloat16 if rec["dtype"] == "bfloat16"
                  else np.dtype(rec["dtype"]))
         parts = []
         for fname in rec["files"]:
-            raw = dctx.decompress((path / fname).read_bytes())
+            raw = _decompress((path / fname).read_bytes(), codec)
             parts.append(np.frombuffer(raw, dtype=dtype))
         arr = np.concatenate(parts) if len(parts) > 1 else parts[0]
         arr = arr.reshape(rec["shape"])

@@ -13,14 +13,20 @@ units. The algorithm:
 4. the store-data / store-address combinations get the 2-μop register→memory
    MOV special case,
 5. SSE and AVX get separate blocking sets to avoid transition penalties.
+
+Execution goes through the measurement engine in two batched waves: one
+isolation wave over all candidates (μop count and port distribution come
+from the same experiment), then one throughput wave over the 1-μop
+survivors.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from repro.core.engine import as_engine
 from repro.core.isa import ISA, MEM, InstrSpec
-from repro.core.machine import (RegPool, independent_seq, isolation_ports,
-                                measure, total_uops)
+from repro.core.machine import (independent_experiment, ports_from_counters,
+                                total_uops, uops_from_counters)
 
 
 @dataclass
@@ -39,9 +45,8 @@ def _excluded(spec: InstrSpec) -> bool:
 
 
 def measured_throughput(machine, spec: InstrSpec, n: int = 8) -> float:
-    pool = RegPool()
-    seq = independent_seq(spec, pool, n)
-    return measure(machine, seq).cycles / n
+    engine = as_engine(machine)
+    return engine.measure(independent_experiment(spec, n)).cycles / n
 
 
 def find_blocking_instructions(machine, isa: ISA,
@@ -51,20 +56,27 @@ def find_blocking_instructions(machine, isa: ISA,
 
     ``extensions`` restricts candidates (separate SSE vs AVX sets, §5.1.1).
     """
+    engine = as_engine(machine)
+    cands = [spec for spec in isa
+             if not _excluded(spec) and spec.extension in extensions
+             and not any(o.otype == MEM and o.written for o in spec.operands)]
+    # store combos handled below (2-μop MOV special case)
+
+    # wave 1: isolation runs — μop count and port distribution per candidate
+    iso = engine.submit([independent_experiment(s, 12) for s in cands])
+    one_uop = [(s, frozenset(ports_from_counters(c, 12)))
+               for s, c in zip(cands, iso)
+               if abs(uops_from_counters(c, 12) - 1.0) <= 0.1]
+    # zero-latency / eliminated candidates have no ports — drop them before
+    # spending throughput measurements on them
+    one_uop = [(s, ports) for s, ports in one_uop if ports]
+
+    # wave 2: throughput of the 1-μop survivors
+    tputs = engine.submit([independent_experiment(s, 8)
+                           for s, _ in one_uop])
     groups: dict[frozenset, list[tuple[float, str]]] = {}
-    for spec in isa:
-        if _excluded(spec) or spec.extension not in extensions:
-            continue
-        if any(o.otype == MEM and o.written for o in spec.operands):
-            continue  # store combos handled below (2-μop MOV special case)
-        u = total_uops(machine, spec)
-        if abs(u - 1.0) > 0.1:
-            continue  # not a 1-μop instruction (or partially eliminated)
-        ports = frozenset(isolation_ports(machine, spec))
-        if not ports:
-            continue  # zero-latency / eliminated
-        tput = measured_throughput(machine, spec)
-        groups.setdefault(ports, []).append((tput, spec.name))
+    for (spec, ports), c_tp in zip(one_uop, tputs):
+        groups.setdefault(ports, []).append((c_tp.cycles / 8, spec.name))
 
     bs = BlockingSet()
     for pc, cand in groups.items():
@@ -77,8 +89,9 @@ def find_blocking_instructions(machine, isa: ISA,
     store = next((s for s in isa
                   if any(o.otype == MEM and o.written for o in s.operands)
                   and s.mnemonic == "MOV"), None)
-    if store is not None and abs(total_uops(machine, store) - 2.0) < 0.1:
-        dist = isolation_ports(machine, store)
+    if store is not None and abs(total_uops(engine, store) - 2.0) < 0.1:
+        c = engine.measure(independent_experiment(store, 12))
+        dist = ports_from_counters(c, 12)
         # the store-data μop pins one port (~1 μop/instance); the
         # store-address μop spreads over its AGU ports (fractional counts)
         data_pc = frozenset(p for p in dist if dist[p] > 0.9)

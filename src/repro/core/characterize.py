@@ -7,6 +7,13 @@ For every supported instruction variant:
 
 The result (:class:`PerfModel`) is the machine-readable artifact (§6.4)
 consumed by the predictor and exported to XML/JSON by ``model_io``.
+
+All measurement goes through the machine's :class:`MeasurementEngine`
+(``machine`` may be a machine or an engine), so a characterization issues
+no duplicate simulator executions: benchmarks shared between phases (μop
+counting, isolation, Algorithm 1 setup) or repeated across runs are served
+from the content-addressed cache. Per-phase wall time and the engine's
+cache statistics are recorded on the model.
 """
 from __future__ import annotations
 
@@ -14,6 +21,7 @@ import time
 from dataclasses import dataclass, field
 
 from repro.core.blocking import BlockingSet, find_blocking_instructions
+from repro.core.engine import as_engine
 from repro.core.isa import ISA, InstrSpec
 from repro.core.latency import LatencyAnalyzer, LatencyResult
 from repro.core.machine import total_uops
@@ -41,6 +49,8 @@ class PerfModel:
     instructions: dict = field(default_factory=dict)  # name -> InstrModel
     blocking: dict = field(default_factory=dict)      # "p05" -> instr name
     run_seconds: float = 0.0
+    phase_seconds: dict = field(default_factory=dict)  # phase -> seconds
+    engine_stats: dict = field(default_factory=dict)   # cache/dedup counters
 
     def __getitem__(self, name: str) -> InstrModel:
         return self.instructions[name]
@@ -53,32 +63,55 @@ def _supported(spec: InstrSpec) -> bool:
                 or spec.is_nop)
 
 
+class _PhaseClock:
+    def __init__(self, sink: dict):
+        self.sink = sink
+
+    def __call__(self, phase: str, fn, *args, **kw):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        self.sink[phase] = self.sink.get(phase, 0.0) + (
+            time.perf_counter() - t0)
+        return out
+
+
 def characterize(machine, isa: ISA, instr_names=None,
                  blocking: BlockingSet | None = None) -> PerfModel:
+    engine = as_engine(machine)
+    stats0 = engine.stats.as_dict()
     t0 = time.time()
+    model = PerfModel(engine.machine.name)
+    clock = _PhaseClock(model.phase_seconds)
     if blocking is None:
         # separate SSE / AVX blocking sets (transition penalties, §5.1.1);
         # merged here since the simulated core has no penalty — the split
         # code path is exercised by dedicated tests.
-        blocking = find_blocking_instructions(machine, isa,
-                                              extensions=("BASE", "SSE"))
-    model = PerfModel(machine.name)
+        blocking = clock("blocking", find_blocking_instructions, engine, isa,
+                         extensions=("BASE", "SSE"))
     model.blocking = {"p" + "".join(sorted(pc)): nm
                       for pc, nm in blocking.instrs.items()}
-    lat_an = LatencyAnalyzer(machine, isa)
+    lat_an = LatencyAnalyzer(engine, isa)
     names = instr_names if instr_names is not None else isa.names()
     for name in names:
         spec = isa[name]
         if not _supported(spec):
             continue
         im = InstrModel(name)
-        im.latency = lat_an.analyze(spec)
-        im.uops = round(total_uops(machine, spec), 2)
-        im.port_usage = infer_port_usage(machine, isa, spec, blocking,
-                                         im.max_latency)
-        im.throughput = measure_throughput(machine, isa, spec)
+        im.latency = clock("latency", lat_an.analyze, spec)
+        im.uops = round(clock("uops", total_uops, engine, spec), 2)
+        im.port_usage = clock("ports", infer_port_usage, engine, isa, spec,
+                              blocking, im.max_latency)
+        im.throughput = clock("throughput", measure_throughput, engine, isa,
+                              spec)
         im.throughput.computed_from_ports = computed_throughput(
             im.port_usage, spec)
         model.instructions[name] = im
     model.run_seconds = time.time() - t0
+    s1 = engine.stats.as_dict()
+    model.engine_stats = {k: s1[k] - stats0[k] for k in s1
+                          if k != "hit_rate"}
+    req = model.engine_stats["requests"]
+    hits = (model.engine_stats["cache_hits"]
+            + model.engine_stats["dedup_hits"])
+    model.engine_stats["hit_rate"] = round(hits / max(1, req), 4)
     return model

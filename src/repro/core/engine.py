@@ -1,0 +1,310 @@
+"""Batched experiment engine: the measurement layer behind Algorithm 2.
+
+The paper's tool (§3.3, Algorithm 2) treats the processor as a black box
+queried by thousands of auto-generated microbenchmarks: serialize the
+benchmark body n times, read the performance counters before and after, and
+difference two run lengths (n=10 vs n=110) to cancel the constant harness
+overhead. This module reifies that protocol as data instead of control flow:
+
+* :class:`Experiment` — one microbenchmark *described declaratively*: the
+  instruction sequence (Algorithm 2's benchmark body) plus the protocol
+  parameters (the two unroll counts). An Experiment says *what* to measure,
+  never *how* or *where*; the same object can be executed on any machine.
+
+* :class:`MeasurementEngine` — executes Experiments against one machine
+  through a content-addressed result cache. The cache key is
+  ``uarch name + canonicalized instruction sequence + run params``, so two
+  inference algorithms that independently generate the same microbenchmark
+  (e.g. μop counting in ``characterize`` and in Algorithm 1's setup) share
+  one execution. ``submit`` takes a whole wave of independent Experiments,
+  dedups identical requests, and executes only the unique misses —
+  Algorithm 2's outer loop, batched.
+
+* :class:`Campaign` — a full characterization run over *several* machines
+  (microarchitectures) at once: the paper's per-uarch tool invocations,
+  sharded across a thread pool, with per-uarch engines whose caches can be
+  persisted (via ``model_io``) so re-runs are incremental.
+
+The inference algorithms (blocking / port_usage / latency / throughput /
+characterize) build Experiments and hand them to an engine; none of them
+calls ``machine.run`` directly anymore. ``engine.stats`` counts requests,
+hits, and executions — the invariant that no duplicate simulator execution
+ever happens is testable, not aspirational.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+
+from repro.core.simulator import Counters, Instr
+
+# Algorithm 2 protocol defaults: the two unroll counts whose difference
+# cancels the constant measurement-harness overhead.
+N_SMALL = 10
+N_LARGE = 110
+
+
+# ---------------------------------------------------------------------------
+# canonical form / content addressing
+# ---------------------------------------------------------------------------
+
+
+def _canon_uop(u) -> tuple:
+    return (sorted(u.ports), u.reads, u.writes, u.latency, u.occupancy)
+
+
+def _canon_behavior(b) -> tuple:
+    return (tuple(_canon_uop(u) for u in b.uops),
+            _canon_behavior(b.same_reg) if b.same_reg else None,
+            b.elim_period, b.dep_breaking_same_reg, b.zero_uop_same_reg,
+            b.divider_extra)
+
+
+def machine_fingerprint(machine) -> str:
+    """Content hash of the machine's hidden parameters (uarch tables).
+
+    Persisted caches carry this fingerprint: measurements are only valid
+    for the exact machine that produced them, so an edit to a uarch
+    definition (or a machine without ground-truth tables) invalidates the
+    cache instead of silently replaying stale counters."""
+    ua = getattr(machine, "uarch", None)
+    if ua is None:
+        payload = f"opaque:{machine.name}"
+    else:
+        payload = repr((ua.name, sorted(ua.ports), ua.issue_width,
+                        ua.load_latency, ua.store_forward_latency,
+                        ua.overhead_cycles, ua.partial_stall_penalty,
+                        sorted((n, _canon_behavior(b))
+                               for n, b in ua.behaviors.items())))
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+def canonical_instr(ins: Instr) -> str:
+    """Stable text form of one instruction instance (operand order-free)."""
+    regs = ",".join(f"{k}={v}" for k, v in sorted(ins.regs.items()))
+    return f"{ins.spec}({regs})#{ins.value_hint}"
+
+
+def canonical_code(code) -> str:
+    return ";".join(canonical_instr(i) for i in code)
+
+
+@dataclass(frozen=True)
+class Experiment:
+    """One declarative microbenchmark: body + Algorithm 2 run parameters."""
+    code: tuple  # tuple[Instr, ...]
+    n_small: int = N_SMALL
+    n_large: int = N_LARGE
+
+    @classmethod
+    def of(cls, code, n_small: int = N_SMALL,
+           n_large: int = N_LARGE) -> "Experiment":
+        return cls(tuple(code), n_small, n_large)
+
+    def cache_key(self, uarch: str) -> str:
+        """Content-addressed key: uarch + canonical sequence + run params."""
+        payload = f"{uarch}|{self.n_small}/{self.n_large}|" \
+                  f"{canonical_code(self.code)}"
+        return hashlib.sha256(payload.encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class EngineStats:
+    requests: int = 0      # Experiments submitted
+    cache_hits: int = 0    # served from a previously executed result
+    dedup_hits: int = 0    # duplicates within a single submitted wave
+    executions: int = 0    # unique Experiments actually executed
+    machine_runs: int = 0  # raw machine.run passes (2 per execution)
+    batches: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return (self.cache_hits + self.dedup_hits) / max(1, self.requests)
+
+    def as_dict(self) -> dict:
+        return {"requests": self.requests, "cache_hits": self.cache_hits,
+                "dedup_hits": self.dedup_hits, "executions": self.executions,
+                "machine_runs": self.machine_runs, "batches": self.batches,
+                "hit_rate": round(self.hit_rate, 4)}
+
+
+class MeasurementEngine:
+    """Cached, deduplicating executor of Experiments on one machine."""
+
+    def __init__(self, machine, cache: dict | None = None, *,
+                 enabled: bool = True):
+        self.machine = machine
+        self.cache: dict[str, Counters] = {} if cache is None else cache
+        self.enabled = enabled
+        self.stats = EngineStats()
+        self._lock = threading.Lock()
+
+    # -- single experiment -------------------------------------------------
+    def measure(self, exp: Experiment) -> Counters:
+        return self.submit([exp])[0]
+
+    # -- batched wave ------------------------------------------------------
+    def submit(self, experiments) -> list[Counters]:
+        """Execute a wave of independent Experiments; identical requests are
+        deduplicated and cached results reused. Returns one Counters per
+        submitted Experiment, in submission order."""
+        experiments = list(experiments)
+        uarch = self.machine.name
+        keys = [e.cache_key(uarch) for e in experiments]
+        with self._lock:
+            self.stats.requests += len(experiments)
+            self.stats.batches += 1
+            if not self.enabled:
+                out = [self._execute(e) for e in experiments]
+                return out
+            todo: dict[str, Experiment] = {}
+            for e, k in zip(experiments, keys):
+                if k in self.cache:
+                    self.stats.cache_hits += 1
+                elif k in todo:
+                    self.stats.dedup_hits += 1
+                else:
+                    todo[k] = e
+            for k, e in todo.items():
+                self.cache[k] = self._execute(e)
+            return [self._copy(self.cache[k]) for k in keys]
+
+    # -- Algorithm 2: overhead-cancelling differenced run ------------------
+    def _execute(self, exp: Experiment) -> Counters:
+        c1 = self.machine.run(list(exp.code) * exp.n_small)
+        c2 = self.machine.run(list(exp.code) * exp.n_large)
+        self.stats.machine_runs += 2
+        self.stats.executions += 1
+        d = exp.n_large - exp.n_small
+        ports = {p: (c2.port_uops.get(p, 0) - c1.port_uops.get(p, 0)) / d
+                 for p in set(c1.port_uops) | set(c2.port_uops)}
+        return Counters((c2.cycles - c1.cycles) / d, ports)
+
+    @staticmethod
+    def _copy(c: Counters) -> Counters:
+        return Counters(c.cycles, dict(c.port_uops))
+
+
+def as_engine(machine_or_engine) -> MeasurementEngine:
+    """Adapt either a machine or an engine to an engine.
+
+    A machine gets one persistent engine attached on first use, so every
+    code path measuring on that machine — including legacy ``measure()``
+    callers — shares a single cache."""
+    if isinstance(machine_or_engine, MeasurementEngine):
+        return machine_or_engine
+    eng = getattr(machine_or_engine, "_engine", None)
+    if eng is None:
+        eng = MeasurementEngine(machine_or_engine)
+        machine_or_engine._engine = eng
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# campaigns: multi-uarch characterization
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CampaignResult:
+    models: dict = field(default_factory=dict)         # uarch -> PerfModel
+    stats: dict = field(default_factory=dict)          # uarch -> stats dict
+    phase_seconds: dict = field(default_factory=dict)  # uarch -> phase -> s
+    uarch_seconds: dict = field(default_factory=dict)  # uarch -> CPU s
+    wall_seconds: float = 0.0  # campaign wall; per-uarch values are
+    # thread CPU seconds (comparable across runs regardless of sharding)
+
+    @property
+    def hit_rate(self) -> float:
+        req = sum(s["requests"] for s in self.stats.values())
+        hit = sum(s["cache_hits"] + s["dedup_hits"]
+                  for s in self.stats.values())
+        return hit / max(1, req)
+
+    def report(self) -> str:
+        lines = [f"{'uarch':10s} {'#instr':>6s} {'cpu_s':>7s} "
+                 f"{'hit%':>6s} {'execs':>6s}"]
+        for name, model in sorted(self.models.items()):
+            s = self.stats[name]
+            lines.append(
+                f"{name:10s} {len(model.instructions):6d} "
+                f"{self.uarch_seconds[name]:7.1f} "
+                f"{100 * s['hit_rate']:6.1f} {s['executions']:6d}")
+        lines.append(f"total wall: {self.wall_seconds:.1f}s, "
+                     f"overall hit rate {100 * self.hit_rate:.1f}%")
+        return "\n".join(lines)
+
+
+class Campaign:
+    """Characterize several machines concurrently through cached engines.
+
+    ``cache_dir`` enables the persistent cache: each machine's engine cache
+    is loaded before and saved after its characterization (serialized by
+    ``model_io``), making ``characterize`` re-runs incremental across
+    processes."""
+
+    def __init__(self, instr_names=None, cache_dir=None,
+                 max_workers: int | None = None):
+        self.instr_names = instr_names
+        self.cache_dir = cache_dir
+        self.max_workers = max_workers
+
+    def _cache_path(self, uarch: str):
+        from pathlib import Path  # noqa: PLC0415
+        return Path(self.cache_dir) / f"{uarch}.meas.json"
+
+    def _run_one(self, machine, isa):
+        from repro.core import model_io  # noqa: PLC0415
+        from repro.core.characterize import characterize  # noqa: PLC0415
+
+        engine = as_engine(machine)
+        if self.cache_dir is not None:
+            path = self._cache_path(machine.name)
+            if path.exists():
+                try:
+                    engine.cache.update(model_io.load_measurement_cache(
+                        path, expect_fingerprint=machine_fingerprint(machine)))
+                except (ValueError, KeyError, OSError) as e:
+                    # a cache is disposable: corruption or a changed machine
+                    # means cold, not dead (the save below rewrites it)
+                    import warnings  # noqa: PLC0415
+                    warnings.warn(f"ignoring unusable measurement cache "
+                                  f"{path}: {e}", stacklevel=2)
+        # thread CPU time: under the GIL the machines' threads interleave,
+        # so wall clock per uarch would just re-measure the whole campaign
+        t0 = time.thread_time()
+        model = characterize(engine, isa, self.instr_names)
+        dt = time.thread_time() - t0
+        if self.cache_dir is not None:
+            model_io.save_measurement_cache(self._cache_path(machine.name),
+                                            engine)
+        return model, engine, dt
+
+    def run(self, machines, isa) -> CampaignResult:
+        """Top-level entry point: one characterization per machine, sharded
+        across a thread pool (the machines are independent black boxes)."""
+        machines = list(machines)
+        res = CampaignResult()
+        t0 = time.perf_counter()
+        workers = self.max_workers or max(1, len(machines))
+        with ThreadPoolExecutor(max_workers=workers) as pool:
+            futures = {m.name: pool.submit(self._run_one, m, isa)
+                       for m in machines}
+            for name, fut in futures.items():
+                model, engine, dt = fut.result()
+                res.models[name] = model
+                # per-run delta (the engine may carry state from prior
+                # campaigns on the same machine), as recorded by characterize
+                res.stats[name] = dict(model.engine_stats)
+                res.phase_seconds[name] = dict(model.phase_seconds)
+                res.uarch_seconds[name] = dt
+        res.wall_seconds = time.perf_counter() - t0
+        return res

@@ -27,8 +27,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from repro.core.engine import Experiment, as_engine
 from repro.core.isa import FLAGS, GPR, IMM, ISA, MEM, VEC, InstrSpec
-from repro.core.machine import RegPool, measure
 from repro.core.simulator import Instr
 
 # dedicated registers (never handed out by pools sized 16/16/8)
@@ -68,14 +68,26 @@ class LatencyResult:
 
 
 class LatencyAnalyzer:
+    """Per-pair latency inference through the measurement engine.
+
+    ``machine`` may be a machine or a :class:`MeasurementEngine`; every
+    dependency-chain benchmark is submitted as a declarative Experiment, so
+    chains shared between pairs (or re-run across analyses) execute once."""
+
     def __init__(self, machine, isa: ISA):
-        self.machine = machine
+        self.engine = as_engine(machine)
+        self.machine = self.engine.machine
         self.isa = isa
         self._boot()
 
     # -- low-level helpers --------------------------------------------------
     def _cycles(self, seq: list[Instr]) -> float:
-        return measure(self.machine, seq).cycles
+        return self.engine.measure(Experiment.of(seq)).cycles
+
+    def _cycles_wave(self, seqs: list[list[Instr]]) -> list[float]:
+        """Batched submission of independent chain benchmarks."""
+        return [c.cycles for c in
+                self.engine.submit([Experiment.of(s) for s in seqs])]
 
     def _flags_break(self) -> Instr:
         return Instr("TEST_R64_R64", {"op1": BREAK_GPR, "op2": BREAK_GPR})
@@ -172,14 +184,14 @@ class LatencyAnalyzer:
         ca, cb = CHAIN_GPR if otype == GPR else CHAIN_VEC
         chains = ({"MOVSX_R64_R32": self.lat_movsx} if otype == GPR
                   else self.vec_chains)
-        per_chain = {}
+        links, offsets = [], []
         for cname, clat in chains.items():
             link: list[Instr] = []
             if s.name == d.name:
                 regs = self._assign(spec, {s.name: ca})
                 link += self._breakers(spec, {s.name})
                 link.append(Instr(spec.name, regs, value_hint))
-                per_chain[cname] = self._cycles(link)
+                offsets.append(0.0)
             else:
                 fixed = {s.name: ca, d.name: cb}
                 regs = self._assign(spec, fixed)
@@ -188,7 +200,10 @@ class LatencyAnalyzer:
                     link.append(self._reg_break(cb, otype))
                 link.append(Instr(spec.name, regs, value_hint))
                 link.append(self._chain_instr(cname, ca, cb))
-                per_chain[cname] = self._cycles(link) - clat
+                offsets.append(clat)
+            links.append(link)
+        per_chain = {cname: cyc - off for cname, cyc, off
+                     in zip(chains, self._cycles_wave(links), offsets)}
         val = min(per_chain.values())
         e = LatencyEntry(s.name, d.name, val, "exact",
                          chain="|".join(per_chain), per_chain=per_chain)
@@ -241,7 +256,7 @@ class LatencyAnalyzer:
         rd = regs.get(d.name)
         if d.otype == VEC:
             # vec dest: compose with vec->gpr mover for an upper bound
-            best, per = None, {}
+            links = []
             for mv in self.cross["to_gpr"]:
                 link = []
                 if d.read:  # break the RMW old-value loop (e.g. AESDEC m128)
@@ -251,8 +266,10 @@ class LatencyAnalyzer:
                          Instr("XOR_R64_R64", {"op1": rb, "op2": CHAIN_GPR[0]}),
                          Instr("XOR_R64_R64", {"op1": rb, "op2": CHAIN_GPR[0]}),
                          self._flags_break()]
-                per[mv] = self._cycles(link) - 2 * self.lat_xor
-                best = per[mv] if best is None else min(best, per[mv])
+                links.append(link)
+            per = {mv: cyc - 2 * self.lat_xor for mv, cyc
+                   in zip(self.cross["to_gpr"], self._cycles_wave(links))}
+            best = min(per.values())
             return LatencyEntry(s.name, d.name, max(best - 1, 0),
                                 "upper_bound", chain="xor2+cross",
                                 per_chain=per)
@@ -288,7 +305,7 @@ class LatencyAnalyzer:
 
     def _cross_type(self, spec, s, d):
         """Different register types: compositions, upper bound (§5.2.1)."""
-        per = {}
+        movers, links = [], []
         if d.otype == VEC and s.otype == GPR:
             movers = self.cross["to_gpr"]  # vec result -> gpr source
             for mv in movers:
@@ -300,7 +317,7 @@ class LatencyAnalyzer:
                 link.append(Instr(spec.name, regs))
                 link.append(Instr(mv, {"op1": CHAIN_GPR[0],
                                        "op2": CHAIN_VEC[0]}))
-                per[mv] = self._cycles(link)
+                links.append(link)
         elif d.otype == GPR and s.otype == VEC:
             movers = self.cross["to_vec"]
             for mv in movers:
@@ -312,7 +329,8 @@ class LatencyAnalyzer:
                 link.append(Instr(spec.name, regs))
                 link.append(Instr(mv, {"op1": CHAIN_VEC[0],
                                        "op2": CHAIN_GPR[0]}))
-                per[mv] = self._cycles(link)
+                links.append(link)
+        per = dict(zip(movers, self._cycles_wave(links)))
         if not per:
             return None
         return LatencyEntry(s.name, d.name, max(min(per.values()) - 1, 0),

@@ -16,22 +16,21 @@ from __future__ import annotations
 import itertools
 from dataclasses import dataclass
 
+from repro.core.engine import N_LARGE, N_SMALL, Experiment, as_engine
 from repro.core.isa import FLAGS, GPR, IMM, MEM, VEC, InstrSpec
 from repro.core.simulator import Counters, Instr
-
-N_SMALL = 10
-N_LARGE = 110
 
 
 def measure(machine, seq: list[Instr], n_small: int = N_SMALL,
             n_large: int = N_LARGE) -> Counters:
-    """Per-copy cycles and per-port μop counts for one copy of ``seq``."""
-    c1 = machine.run(list(seq) * n_small)
-    c2 = machine.run(list(seq) * n_large)
-    d = n_large - n_small
-    ports = {p: (c2.port_uops.get(p, 0) - c1.port_uops.get(p, 0)) / d
-             for p in set(c1.port_uops) | set(c2.port_uops)}
-    return Counters((c2.cycles - c1.cycles) / d, ports)
+    """Per-copy cycles and per-port μop counts for one copy of ``seq``.
+
+    Routed through the machine's :class:`~repro.core.engine
+    .MeasurementEngine`, so identical benchmarks are executed once per
+    machine regardless of which inference algorithm requests them.
+    ``machine`` may be a machine or an engine."""
+    return as_engine(machine).measure(
+        Experiment(tuple(seq), n_small, n_large))
 
 
 @dataclass
@@ -98,20 +97,37 @@ def flags_breaker(isa, pool: RegPool, avoid: set = frozenset()) -> Instr:
     return Instr(spec.name, {"op1": r, "op2": r})
 
 
+def independent_experiment(spec: InstrSpec, n: int = 12,
+                           value_hint: str = "low") -> Experiment:
+    """Declarative experiment: ``n`` independent instances from a fresh
+    register pool. Deterministic per (spec, n, hint) — which is exactly what
+    makes μop counting and isolation measurement the *same* cache entry."""
+    return Experiment.of(independent_seq(spec, RegPool(), n,
+                                         value_hint=value_hint))
+
+
+def uops_from_counters(c: Counters, n: int) -> float:
+    return c.total_uops / n
+
+
+def ports_from_counters(c: Counters, n: int,
+                        eps: float = 0.05) -> dict[str, float]:
+    return {p: v / n for p, v in c.port_uops.items() if v / n > eps}
+
+
 def total_uops(machine, spec: InstrSpec, pool: RegPool | None = None,
                n: int = 12) -> float:
     """Average μop count of one instance, from independent repetitions."""
-    pool = pool or RegPool()
-    seq = independent_seq(spec, pool, n)
-    c = measure(machine, seq)
-    return c.total_uops / n
+    if pool is None:
+        c = as_engine(machine).measure(independent_experiment(spec, n))
+    else:
+        c = measure(machine, independent_seq(spec, pool, n))
+    return uops_from_counters(c, n)
 
 
 def isolation_ports(machine, spec: InstrSpec, n: int = 12,
                     eps: float = 0.05) -> dict[str, float]:
     """Per-port μop distribution when run in isolation (the naive signal
     that §5.1 shows is ambiguous). Returns per-instance averages."""
-    pool = RegPool()
-    seq = independent_seq(spec, pool, n)
-    c = measure(machine, seq)
-    return {p: v / n for p, v in c.port_uops.items() if v / n > eps}
+    c = as_engine(machine).measure(independent_experiment(spec, n))
+    return ports_from_counters(c, n, eps)

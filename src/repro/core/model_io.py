@@ -5,16 +5,22 @@ with <operand> children and per-architecture <architecture><measurement>
 elements carrying ports=, uops=, plus <latency> edges per (src,dst) operand
 pair. Round-trips losslessly through ``load_xml`` (used by the predictor and
 by tests).
+
+Also serializes the measurement engine's content-addressed result cache
+(``save_measurement_cache`` / ``load_measurement_cache``), making
+characterization campaigns incremental across processes.
 """
 from __future__ import annotations
 
 import json
 import xml.etree.ElementTree as ET
+from pathlib import Path
 from xml.dom import minidom
 
 from repro.core.characterize import InstrModel, PerfModel
 from repro.core.latency import LatencyEntry, LatencyResult
 from repro.core.port_usage import PortUsage
+from repro.core.simulator import Counters
 from repro.core.throughput import ThroughputResult
 
 
@@ -124,3 +130,44 @@ def to_json(model: PerfModel) -> str:
                 }
         out["instructions"][name] = rec
     return json.dumps(out, indent=1)
+
+
+# ---------------------------------------------------------------------------
+# persistent measurement cache (engine): key -> Counters
+# ---------------------------------------------------------------------------
+
+
+def save_measurement_cache(path, engine_or_cache, uarch: str | None = None
+                           ) -> None:
+    """Serialize an engine's content-addressed result cache to JSON.
+
+    The machine's parameter fingerprint is stored alongside, so a cache can
+    never be replayed against an edited uarch definition."""
+    from repro.core.engine import machine_fingerprint  # noqa: PLC0415
+
+    cache = getattr(engine_or_cache, "cache", engine_or_cache)
+    machine = getattr(engine_or_cache, "machine", None)
+    if uarch is None:
+        uarch = machine.name if machine is not None else ""
+    fp = machine_fingerprint(machine) if machine is not None else ""
+    entries = {k: [c.cycles, c.port_uops] for k, c in cache.items()}
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps({"uarch": uarch, "fingerprint": fp,
+                                "entries": entries}))
+
+
+def load_measurement_cache(path, expect_fingerprint: str | None = None
+                           ) -> dict:
+    """Load a cache written by :func:`save_measurement_cache`.
+
+    With ``expect_fingerprint`` set, a cache written for a machine with
+    different hidden parameters raises ValueError (stale measurements must
+    never be replayed as fresh ones)."""
+    data = json.loads(Path(path).read_text())
+    if (expect_fingerprint is not None
+            and data.get("fingerprint") != expect_fingerprint):
+        raise ValueError("machine fingerprint mismatch (uarch definition or "
+                         "simulator changed since this cache was written)")
+    return {k: Counters(cycles, dict(ports))
+            for k, (cycles, ports) in data["entries"].items()}

@@ -10,15 +10,24 @@ in earlier iterations are subtracted (line 10 of Algorithm 1).
 Includes both optimizations from the paper: iterate only over combinations
 intersecting the isolation-measurement ports, and exit early once the
 attributed μop count reaches the instruction's total μop count.
+
+Experiments are submitted to the measurement engine one combination-size
+tier at a time: all |pc|=1 experiments in one batch, then |pc|=2, ... —
+attribution (and the early exit) only ever depends on smaller combinations,
+so batching within a tier is exact, and the early exit still skips whole
+tiers of useless measurements.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from itertools import groupby
 
 from repro.core.blocking import BlockingSet
+from repro.core.engine import Experiment, as_engine
 from repro.core.isa import ISA, InstrSpec
-from repro.core.machine import (RegPool, fresh_instance, isolation_ports,
-                                measure, total_uops)
+from repro.core.machine import (RegPool, fresh_instance,
+                                independent_experiment, ports_from_counters,
+                                uops_from_counters)
 
 
 @dataclass
@@ -41,22 +50,23 @@ def infer_port_usage(machine, isa: ISA, instr: InstrSpec | str,
                      block_rep_cap: int = 64) -> PortUsage:
     """Algorithm 1. ``max_latency``: max over the instruction's latency
     pairs (§5.2), used to size blockRep = 8 * maxLatency."""
+    engine = as_engine(machine)
     spec = isa[instr] if isinstance(instr, str) else instr
     pool = RegPool()
     result = PortUsage()
-    result.total_uops = round(total_uops(machine, spec), 2)
-    result.isolation = isolation_ports(machine, spec)
+    iso = engine.measure(independent_experiment(spec, 12))
+    result.total_uops = round(uops_from_counters(iso, 12), 2)
+    result.isolation = ports_from_counters(iso, 12)
     iso_ports = set(result.isolation)
 
     # optimization 1: only combinations whose ports appear in isolation
     combos = [pc for pc in blocking.combos() if pc & iso_ports]
     combos.sort(key=lambda pc: (len(pc), sorted(pc)))
 
-    n_ports = len(machine.ports)
+    n_ports = len(engine.machine.ports)
     block_rep = min(max(8 * max_latency, n_ports), block_rep_cap)
 
-    attributed = 0
-    for pc in combos:
+    def blocked_experiment(pc) -> Experiment:
         blk_spec = isa[blocking.instrs[pc]]
         # the analyzed instruction's registers, kept apart from blockers'
         target = fresh_instance(spec, pool)
@@ -64,17 +74,26 @@ def infer_port_usage(machine, isa: ISA, instr: InstrSpec | str,
         code = [fresh_instance(blk_spec, pool, avoid)
                 for _ in range(block_rep)]
         code.append(target)
-        c = measure(machine, code)
-        uops = sum(c.port_uops.get(p, 0.0) for p in pc)
-        uops -= block_rep * blocking.uops_on_pc[pc]           # line 7
-        for pc2, u2 in result.usage.items():                  # line 8-10
-            if pc2 < pc:
-                uops -= u2
-        uops_i = round(uops)
-        if uops_i > 0:
-            result.usage[pc] = uops_i
-            attributed += uops_i
-        # optimization 2: early exit
+        return Experiment.of(code)
+
+    attributed = 0
+    for _, tier in groupby(combos, key=len):
+        # optimization 2: early exit (checked per size tier — attribution
+        # never depends on equal-or-larger combinations)
         if attributed >= round(result.total_uops):
             break
+        tier = list(tier)
+        counters = engine.submit([blocked_experiment(pc) for pc in tier])
+        for pc, c in zip(tier, counters):
+            uops = sum(c.port_uops.get(p, 0.0) for p in pc)
+            uops -= block_rep * blocking.uops_on_pc[pc]           # line 7
+            for pc2, u2 in result.usage.items():                  # line 8-10
+                if pc2 < pc:
+                    uops -= u2
+            uops_i = round(uops)
+            if uops_i > 0:
+                result.usage[pc] = uops_i
+                attributed += uops_i
+            if attributed >= round(result.total_uops):
+                break
     return result

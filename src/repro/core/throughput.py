@@ -14,14 +14,19 @@ Two notions are produced for every instruction:
   §5.3.2 — the minimal achievable maximum port load. Not valid for divider
   instructions (the divider is not fully pipelined), which keep the measured
   value annotated instead.
+
+All sequence lengths (and the divider high-operand variants) are independent
+experiments, submitted to the measurement engine as one batched wave.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from repro.core.engine import Experiment, as_engine
 from repro.core.isa import FLAGS, ISA, InstrSpec
 from repro.core.lp import throughput_lp
-from repro.core.machine import RegPool, flags_breaker, independent_seq, measure
+from repro.core.machine import (RegPool, flags_breaker, independent_experiment,
+                                independent_seq)
 from repro.core.port_usage import PortUsage
 
 SEQ_LENS = (1, 2, 4, 8)
@@ -39,36 +44,46 @@ class ThroughputResult:
 
 def measure_throughput(machine, isa: ISA, instr: InstrSpec | str,
                        value_hint: str = "low") -> ThroughputResult:
+    engine = as_engine(machine)
     spec = isa[instr] if isinstance(instr, str) else instr
     res = ThroughputResult(spec.name)
-    best = None
-    for n in SEQ_LENS:
-        pool = RegPool()
-        seq = independent_seq(spec, pool, n, value_hint=value_hint)
-        c = measure(machine, seq).cycles / n
-        res.by_seq_len[n] = c
-        best = c if best is None else min(best, c)
-    res.measured = best
+
+    wave = [independent_experiment(spec, n, value_hint) for n in SEQ_LENS]
+    lens = list(SEQ_LENS)
     # implicit RMW operands: variant with dependency-breaking instructions
-    if any(o.rmw and o.implicit and o.otype == FLAGS for o in spec.operands):
+    rmw_flags = any(o.rmw and o.implicit and o.otype == FLAGS
+                    for o in spec.operands)
+    if rmw_flags:
         pool = RegPool()
         seq = []
         for ins in independent_seq(spec, pool, 4):
             seq.append(ins)
             seq.append(flags_breaker(isa, pool))
+        wave.append(Experiment.of(seq))
+    if spec.uses_divider:
+        wave += [independent_experiment(spec, n, "high") for n in SEQ_LENS]
+
+    counters = engine.submit(wave)
+
+    best = None
+    for n, c in zip(lens, counters[:len(lens)]):
+        cyc = c.cycles / n
+        res.by_seq_len[n] = cyc
+        best = cyc if best is None else min(best, cyc)
+    res.measured = best
+    rest = counters[len(lens):]
+    if rmw_flags:
         # per-instr cycles of the *measured* instruction (breakers add μops
         # and execution resources, which is why this does not always help —
         # §5.3.1). Recorded separately; ``measured`` stays the canonical
         # breaker-free Def.-2 number (the paper reports CMC = 1, not 0.5).
-        c = measure(machine, seq).cycles / 4
-        res.with_breakers = c
+        res.with_breakers = rest[0].cycles / 4
+        rest = rest[1:]
     if spec.uses_divider:
         hi = None
-        for n in SEQ_LENS:
-            pool = RegPool()
-            seq = independent_seq(spec, pool, n, value_hint="high")
-            c = measure(machine, seq).cycles / n
-            hi = c if hi is None else min(hi, c)
+        for n, c in zip(lens, rest):
+            cyc = c.cycles / n
+            hi = cyc if hi is None else min(hi, cyc)
         res.high_value = hi
     return res
 

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis): the paper's central correctness claims
 made mechanically checkable against randomly drawn hidden ground truths."""
 import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
