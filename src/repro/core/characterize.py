@@ -21,7 +21,7 @@ import time
 from dataclasses import dataclass, field
 
 from repro.core.blocking import BlockingSet, find_blocking_instructions
-from repro.core.engine import as_engine
+from repro.core.engine import as_engine, machine_fingerprint
 from repro.core.isa import ISA, InstrSpec
 from repro.core.latency import LatencyAnalyzer, LatencyResult
 from repro.core.machine import total_uops
@@ -51,6 +51,10 @@ class PerfModel:
     run_seconds: float = 0.0
     phase_seconds: dict = field(default_factory=dict)  # phase -> seconds
     engine_stats: dict = field(default_factory=dict)   # cache/dedup counters
+    # content hash of the machine's hidden parameters at measurement time;
+    # exported with the artifact so a registry can refuse to serve a model
+    # measured on a different uarch definition (see service/registry.py)
+    fingerprint: str = ""
 
     def __getitem__(self, name: str) -> InstrModel:
         return self.instructions[name]
@@ -81,6 +85,7 @@ def characterize(machine, isa: ISA, instr_names=None,
     stats0 = engine.stats.as_dict()
     t0 = time.time()
     model = PerfModel(engine.machine.name)
+    model.fingerprint = machine_fingerprint(engine.machine)
     clock = _PhaseClock(model.phase_seconds)
     if blocking is None:
         # separate SSE / AVX blocking sets (transition penalties, §5.1.1);

@@ -7,8 +7,80 @@
 Linearized with z ≥ Σ f(p, pc) per port. Solved with scipy's HiGHS; a pure
 bisection + max-flow feasibility fallback (networkx) covers environments
 without scipy and doubles as an independent check in tests.
+
+For prediction serving there is also a *closed form*: by max-flow/min-cut
+(Hall's condition on the bipartite pc→port graph), a makespan z is feasible
+iff for every port set S, the μops that can only run on S fit: demand(S) ≤
+z·|S|, where demand(S) = Σ{μ(pc) : pc ⊆ S}. The binding S can always be
+taken as a union of the port combinations present, so
+
+    z* = max over unions S of the pcs of demand(S) / |S|
+
+which is exact, needs no solver, and vectorizes across many blocks as one
+matrix pass (see service/batch_predictor.py). ``port_bound_from_usage`` is
+the shared entry point: closed form while the union closure stays small,
+LP fallback beyond that — both the single-block reference predictor and the
+batched service path route through it, so their numbers are identical.
 """
 from __future__ import annotations
+
+# Beyond this many distinct port combinations the union closure may blow up
+# combinatorially; fall back to the LP. Both the reference predictor and the
+# batch predictor apply the same rule per block, keeping them bit-identical.
+CUT_COMBO_CAP = 12
+
+
+def union_closure(combos, cap: int = 4096) -> list | None:
+    """All distinct unions of the given port combinations, sorted smallest
+    first — the candidate min-cut port sets. Returns None if the closure
+    exceeds ``cap`` sets (caller should use the LP instead)."""
+    closed: set = set()
+    for pc in combos:
+        pc = frozenset(pc)
+        closed |= {pc} | {pc | s for s in closed}
+        if len(closed) > cap:
+            return None
+    return sorted(closed, key=lambda s: (len(s), sorted(s)))
+
+
+def cut_bound(usage: dict, candidates=None) -> float:
+    """Exact min-max port load via the min-cut closed form.
+
+    ``candidates`` may be any superset of the unions of ``usage``'s port
+    combinations (e.g. a model-wide closure shared across blocks): extra
+    sets can never exceed the maximum, because shrinking a candidate to the
+    union of the combinations it contains only increases its ratio."""
+    usage = {pc: float(n) for pc, n in usage.items() if n > 0}
+    if not usage:
+        return 0.0
+    if candidates is None:
+        candidates = union_closure(usage)
+        if candidates is None:  # pragma: no cover - guarded by caller's cap
+            return throughput_lp(usage)
+    best = 0.0
+    for s in candidates:
+        demand = 0.0
+        for pc, n in usage.items():
+            if pc <= s:
+                demand += n
+        best = max(best, demand / len(s))
+    return best
+
+
+def port_bound_from_usage(usage: dict, combo_cap: int = CUT_COMBO_CAP
+                          ) -> float:
+    """Port-pressure bound shared by the reference and batched predictors:
+    the closed-form cut bound when few distinct combinations are involved
+    (the common case), the LP otherwise."""
+    distinct = [pc for pc, n in usage.items() if n > 0]
+    if not distinct:
+        return 0.0
+    if len(distinct) > combo_cap:
+        # canonical variable order: the LP result must not depend on dict
+        # insertion order (in-memory vs artifact-loaded models)
+        return throughput_lp(dict(sorted(usage.items(),
+                                         key=lambda kv: sorted(kv[0]))))
+    return cut_bound(usage)
 
 
 def throughput_lp(usage: dict, ports=None) -> float:

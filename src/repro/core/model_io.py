@@ -31,6 +31,8 @@ def _fmt(x) -> str:
 def to_xml(model: PerfModel, isa=None) -> str:
     root = ET.Element("root")
     arch = ET.SubElement(root, "architecture", name=model.uarch)
+    if model.fingerprint:
+        arch.set("fingerprint", model.fingerprint)
     blk = ET.SubElement(arch, "blockingInstructions")
     for pc, nm in sorted(model.blocking.items()):
         ET.SubElement(blk, "blocking", ports=pc, instr=nm)
@@ -71,6 +73,7 @@ def load_xml(text: str) -> PerfModel:
     root = ET.fromstring(text)
     arch = root.find("architecture")
     model = PerfModel(arch.get("name"))
+    model.fingerprint = arch.get("fingerprint", "") or ""
     blk = arch.find("blockingInstructions")
     for b in (blk if blk is not None else []):
         model.blocking[b.get("ports")] = b.get("instr")
@@ -79,11 +82,7 @@ def load_xml(text: str) -> PerfModel:
         im = InstrModel(name)
         m = el.find("measurement")
         im.uops = float(m.get("uops"))
-        pu = PortUsage()
-        if m.get("ports") and m.get("ports") != "0":
-            for part in m.get("ports").split("+"):
-                n, pc = part.split("*p")
-                pu.usage[frozenset(pc)] = int(n)
+        pu = _parse_ports(m.get("ports"))
         pu.total_uops = im.uops
         im.port_usage = pu
         tp = ThroughputResult(name)
@@ -109,6 +108,7 @@ def load_xml(text: str) -> PerfModel:
 
 def to_json(model: PerfModel) -> str:
     out = {"uarch": model.uarch, "blocking": model.blocking,
+           "fingerprint": model.fingerprint,
            "run_seconds": model.run_seconds, "instructions": {}}
     for name, im in model.instructions.items():
         rec = {"uops": im.uops,
@@ -130,6 +130,51 @@ def to_json(model: PerfModel) -> str:
                 }
         out["instructions"][name] = rec
     return json.dumps(out, indent=1)
+
+
+def _parse_ports(notation: str | None) -> PortUsage:
+    pu = PortUsage()
+    if notation and notation != "0":
+        for part in notation.split("+"):
+            n, pc = part.split("*p")
+            pu.usage[frozenset(pc)] = int(n)
+    return pu
+
+
+def load_json(text: str) -> PerfModel:
+    """Inverse of :func:`to_json` (JSON floats round-trip exactly, so a
+    JSON-loaded model predicts identically to the in-memory one)."""
+    data = json.loads(text)
+    model = PerfModel(data["uarch"])
+    model.blocking = dict(data.get("blocking") or {})
+    model.fingerprint = data.get("fingerprint", "") or ""
+    model.run_seconds = data.get("run_seconds", 0.0)
+    for name, rec in data.get("instructions", {}).items():
+        im = InstrModel(name)
+        im.uops = float(rec["uops"])
+        im.port_usage = _parse_ports(rec.get("ports"))
+        im.port_usage.total_uops = im.uops
+        tp = ThroughputResult(name)
+        if rec.get("throughput"):
+            t = rec["throughput"]
+            tp.measured = t.get("measured", 0.0)
+            tp.by_seq_len = {int(k): v
+                             for k, v in (t.get("by_seq_len") or {}).items()}
+            tp.with_breakers = t.get("with_breakers")
+            tp.computed_from_ports = t.get("computed_from_ports")
+            tp.high_value = t.get("high_value")
+        im.throughput = tp
+        lat = LatencyResult(name)
+        for pair, e in (rec.get("latency") or {}).items():
+            src, _, dst = pair.partition("->")
+            entry = LatencyEntry(src, dst, e["cycles"],
+                                 e.get("kind") or "exact")
+            entry.same_reg = e.get("same_reg")
+            entry.high_value = e.get("high")
+            lat.entries[(src, dst)] = entry
+        im.latency = lat
+        model.instructions[name] = im
+    return model
 
 
 # ---------------------------------------------------------------------------

@@ -16,6 +16,12 @@ steady-state cycles/iteration as the max of three bounds:
 IACA (§7.2): it ignores status-flag and memory dependencies, models a single
 scalar latency per instruction, and can carry stale port tables — used by
 benchmarks to regenerate the paper's agreement-table methodology.
+
+This module is the *single-block reference*: the batched service path
+(service/batch_predictor.py) vectorizes the port and front-end bounds but
+shares every scalar helper here (``sum_usage``, ``port_pressure``,
+``classify_bottleneck``, ``_latency_bound``) and the port-bound entry point
+in ``lp.py``, so batch and single-block predictions are bit-identical.
 """
 from __future__ import annotations
 
@@ -23,8 +29,46 @@ from dataclasses import dataclass, field
 
 from repro.core.characterize import PerfModel
 from repro.core.isa import FLAGS, IMM, ISA, MEM
-from repro.core.lp import throughput_lp
+from repro.core.lp import port_bound_from_usage, throughput_lp
 from repro.core.simulator import Instr
+
+
+class UnknownInstructionError(KeyError):
+    """A block references instruction variants absent from the model.
+
+    This is an expected condition, not a bug: the paper's tool does not
+    characterize every instruction (§8 — system, serializing, control-flow),
+    and a model may come from a partial campaign. Carries the sorted list of
+    ``missing`` variant names and the model's ``uarch`` so services can
+    return it as a structured error instead of a bare KeyError."""
+
+    def __init__(self, missing, uarch: str = ""):
+        self.missing = sorted(set(missing))
+        self.uarch = uarch
+        super().__init__(f"model {uarch or '<unnamed>'} has no "
+                         f"characterization for: {', '.join(self.missing)}")
+
+    def __str__(self) -> str:  # KeyError.__str__ would re-quote the message
+        return self.args[0]
+
+    def __reduce__(self):  # KeyError's reduce would replay the message
+        return (type(self), (self.missing, self.uarch))
+
+
+def missing_specs(model: PerfModel, code, isa: ISA | None = None
+                  ) -> list[str]:
+    """Instruction variants used by ``code`` that cannot be predicted:
+    absent from ``model``, or (with ``isa`` given) from the serving ISA —
+    the latency bound needs the operand structure, not just measurements."""
+    return sorted({i.spec for i in code
+                   if i.spec not in model.instructions
+                   or (isa is not None and i.spec not in isa)})
+
+
+def check_block(model: PerfModel, code, isa: ISA | None = None) -> None:
+    missing = missing_specs(model, code, isa)
+    if missing:
+        raise UnknownInstructionError(missing, model.uarch)
 
 
 @dataclass
@@ -37,7 +81,10 @@ class Prediction:
     bottleneck: str = ""
 
 
-def _resource_bounds(model: PerfModel, code: list[Instr], issue_width: int):
+def sum_usage(model: PerfModel, code: list[Instr]):
+    """Summed port-usage multiset and μop count of a block, in code order
+    (the accumulation order is part of the reference semantics: the batch
+    predictor reproduces it position by position)."""
     usage_sum: dict[frozenset, float] = {}
     uops = 0.0
     for ins in code:
@@ -46,13 +93,36 @@ def _resource_bounds(model: PerfModel, code: list[Instr], issue_width: int):
         if im.port_usage:
             for pc, n in im.port_usage.usage.items():
                 usage_sum[pc] = usage_sum.get(pc, 0) + n
-    port_bound = throughput_lp(usage_sum) if usage_sum else 0.0
-    # per-port pressure under an optimal balanced assignment
+    return usage_sum, uops
+
+
+def port_pressure(usage_sum: dict) -> dict:
+    """Per-port pressure under an optimal balanced assignment.
+
+    Combinations are visited in canonical order so the float accumulation
+    is independent of dict insertion order — an in-memory model and its
+    XML round trip must produce bit-identical pressures."""
     pressure: dict[str, float] = {}
-    for pc, n in usage_sum.items():
+    for pc, n in sorted(usage_sum.items(), key=lambda kv: sorted(kv[0])):
         for p in sorted(pc):
             pressure[p] = pressure.get(p, 0.0) + n / len(pc)
-    return port_bound, uops / issue_width, pressure
+    return pressure
+
+
+def classify_bottleneck(cycles: float, port_bound: float, lat_bound: float
+                        ) -> str:
+    """Deterministic tie-break: ports > latency > frontend."""
+    if port_bound >= cycles - 1e-9:
+        return "ports"
+    if lat_bound >= cycles - 1e-9:
+        return "latency"
+    return "frontend"
+
+
+def _resource_bounds(model: PerfModel, code: list[Instr], issue_width: int):
+    usage_sum, uops = sum_usage(model, code)
+    port_bound = port_bound_from_usage(usage_sum) if usage_sum else 0.0
+    return port_bound, uops / issue_width, port_pressure(usage_sum)
 
 
 def _latency_bound(model: PerfModel, isa: ISA, code: list[Instr],
@@ -115,16 +185,11 @@ def _latency_bound(model: PerfModel, isa: ISA, code: list[Instr],
 
 def predict(model: PerfModel, isa: ISA, code: list[Instr],
             issue_width: int = 4) -> Prediction:
+    check_block(model, code, isa)
     port_bound, fe_bound, pressure = _resource_bounds(model, code, issue_width)
     lat_bound = _latency_bound(model, isa, code)
     cycles = max(port_bound, lat_bound, fe_bound)
-    # deterministic tie-break: ports > latency > frontend
-    if port_bound >= cycles - 1e-9:
-        bn = "ports"
-    elif lat_bound >= cycles - 1e-9:
-        bn = "latency"
-    else:
-        bn = "frontend"
+    bn = classify_bottleneck(cycles, port_bound, lat_bound)
     return Prediction(cycles, port_bound, lat_bound, fe_bound, pressure, bn)
 
 
@@ -141,6 +206,7 @@ class LegacyAnalyzer:
         self.issue_width = issue_width
 
     def predict(self, code: list[Instr]) -> Prediction:
+        check_block(self.model, code, self.isa)
         usage_sum: dict[frozenset, float] = {}
         uops = 0.0
         for ins in code:

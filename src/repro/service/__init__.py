@@ -1,0 +1,15 @@
+# uops-as-a-service: turn exported machine-readable models (§6.4) into a
+# queryable prediction backend — a model registry over XML artifacts, a
+# vectorized batch predictor, a threaded request server with coalescing and
+# an LRU result cache, and a client + CLI.
+from repro.service.batch_predictor import BatchPredictor
+from repro.service.client import ServiceClient, local_service
+from repro.service.registry import (ModelNotFoundError, ModelRegistry,
+                                    StaleModelError)
+from repro.service.server import PredictionServer, PredictionService
+
+__all__ = [
+    "BatchPredictor", "ModelNotFoundError", "ModelRegistry",
+    "PredictionServer", "PredictionService", "ServiceClient",
+    "StaleModelError", "local_service",
+]

@@ -1,0 +1,129 @@
+"""Vectorized batch prediction: many basic blocks, one array pass.
+
+``core/predictor.py`` is the single-block *reference*; this module is the
+throughput path behind the service. It packs every block's summed port-usage
+row into one dense ``(blocks × combos)`` matrix and computes all port bounds
+with a single matrix product against the model's precomputed min-cut
+candidate sets (the closed form in ``core/lp.py``), instead of solving one
+LP per block. Front-end bounds, per-port pressure, the latency bound, and
+the bottleneck tie-break reuse the reference helpers, so the results are
+bit-identical to calling :func:`repro.core.predictor.predict` per block:
+
+* port-usage μop counts are integers (PortUsage / the XML schema), so the
+  matrix product's float64 sums are exact regardless of summation order;
+* the min-cut maximum over the model-wide candidate closure equals the
+  maximum over each block's own closure (shrinking a candidate to the union
+  of the combinations it contains only increases its ratio);
+* blocks with more distinct combinations than ``CUT_COMBO_CAP`` fall back
+  to the same LP on the same insertion-ordered usage dict as the reference.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.characterize import PerfModel
+from repro.core.isa import ISA
+from repro.core.lp import CUT_COMBO_CAP, port_bound_from_usage, union_closure
+from repro.core.predictor import (Prediction, UnknownInstructionError,
+                                  _latency_bound, check_block,
+                                  classify_bottleneck, port_pressure,
+                                  sum_usage)
+
+
+class BatchPredictor:
+    """Precompiled predictor for one :class:`PerfModel`."""
+
+    def __init__(self, model: PerfModel, isa: ISA, issue_width: int = 4):
+        self.model = model
+        self.isa = isa
+        self.issue_width = issue_width
+        # distinct port combinations across the model, in a fixed order
+        combos: list[frozenset] = []
+        index: dict[frozenset, int] = {}
+        for im in model.instructions.values():
+            if im.port_usage:
+                for pc in im.port_usage.usage:
+                    if pc not in index:
+                        index[pc] = len(combos)
+                        combos.append(pc)
+        self._combos = combos
+        self._combo_idx = index
+        # model-wide min-cut candidates: all unions of the model's combos.
+        # None => too many to enumerate; per-block closed form / LP instead.
+        cand = union_closure(combos) if combos else []
+        if cand:
+            self._cut_mask = np.array(
+                [[float(pc <= s) for pc in combos] for s in cand]).T  # C×S
+            self._cut_size = np.array([float(len(s)) for s in cand])
+        else:
+            self._cut_mask = None
+            self._cut_size = None
+
+    # ------------------------------------------------------------------
+    def predict(self, code) -> Prediction:
+        return self.predict_batch([code])[0]
+
+    def predict_batch(self, blocks, on_error: str = "raise") -> list:
+        """Predictions for many blocks in one pass.
+
+        ``on_error="raise"`` raises :class:`UnknownInstructionError` for the
+        first block referencing uncharacterized instructions;
+        ``on_error="return"`` yields the exception object in that block's
+        slot instead (the service's per-request structured errors)."""
+        codes = [list(b) for b in blocks]
+        errors: dict[int, UnknownInstructionError] = {}
+        for i, code in enumerate(codes):
+            try:
+                check_block(self.model, code, self.isa)
+            except UnknownInstructionError as e:
+                if on_error == "raise":
+                    raise
+                errors[i] = e
+        valid = [i for i in range(len(codes)) if i not in errors]
+        # summed usage per block, in code order (reference semantics)
+        sums = {i: sum_usage(self.model, codes[i]) for i in valid}
+        port_bounds = self._port_bounds(sums)
+        out: list = [None] * len(codes)
+        for i in valid:
+            usage_sum, uops = sums[i]
+            fe = uops / self.issue_width
+            lat = _latency_bound(self.model, self.isa, codes[i])
+            pb = port_bounds[i]
+            cycles = max(pb, lat, fe)
+            out[i] = Prediction(cycles, pb, lat, fe,
+                                port_pressure(usage_sum),
+                                classify_bottleneck(cycles, pb, lat))
+        for i, e in errors.items():
+            out[i] = e
+        return out
+
+    # ------------------------------------------------------------------
+    def _port_bounds(self, sums: dict) -> dict:
+        """Port bound per block index: one matrix pass over the dense usage
+        rows where the closed form applies, LP fallback elsewhere."""
+        bounds: dict[int, float] = {}
+        if not sums:
+            return bounds
+        idxs = sorted(sums)
+        fast_rows: list[int] = []
+        for i in idxs:
+            usage_sum, _ = sums[i]
+            distinct = sum(1 for n in usage_sum.values() if n > 0)
+            if distinct == 0:
+                bounds[i] = 0.0
+            elif distinct > CUT_COMBO_CAP or self._cut_mask is None:
+                # same rule + same insertion-ordered dict as the reference
+                bounds[i] = port_bound_from_usage(usage_sum)
+            else:
+                fast_rows.append(i)
+        if fast_rows:
+            u = np.zeros((len(fast_rows), len(self._combos)))
+            for r, i in enumerate(fast_rows):
+                for pc, n in sums[i][0].items():
+                    u[r, self._combo_idx[pc]] = n
+            demand = u @ self._cut_mask              # rows × candidates
+            ratios = demand / self._cut_size
+            best = ratios.max(axis=1)
+            for r, i in enumerate(fast_rows):
+                bounds[i] = float(best[r])
+        return bounds

@@ -1,0 +1,124 @@
+"""Client for uops-as-a-service: a persistent socket speaking the
+newline-delimited JSON protocol, plus a ``local_service`` helper that spins
+up registry + service + server in-process (ephemeral port) for CLIs, tests,
+and benchmarks.
+"""
+from __future__ import annotations
+
+import contextlib
+import socket
+
+from repro.service import protocol
+
+
+class ServiceError(RuntimeError):
+    """Server answered with a structured error (``resp["error"]``)."""
+
+    def __init__(self, error: dict):
+        self.error = dict(error or {})
+        super().__init__(self.error.get("message", str(self.error)))
+
+    @property
+    def type(self) -> str:
+        return self.error.get("type", "")
+
+
+class ServiceClient:
+    """One connection to a prediction server. Not thread-safe: use one
+    client per thread (the server side is threaded)."""
+
+    def __init__(self, host: str, port: int, timeout: float = 30.0):
+        self.host, self.port = host, port
+        self._sock = socket.create_connection((host, port), timeout=timeout)
+        self._rfile = self._sock.makefile("rb")
+        self._wfile = self._sock.makefile("wb")
+
+    # -- plumbing ----------------------------------------------------------
+    def _call(self, msg: dict) -> dict:
+        protocol.send_msg(self._wfile, msg)
+        resp = protocol.recv_msg(self._rfile)
+        if resp is None:
+            raise ConnectionError("server closed the connection")
+        return resp
+
+    @staticmethod
+    def _unwrap(resp: dict):
+        if not resp.get("ok"):
+            raise ServiceError(resp.get("error"))
+        return resp.get("result")
+
+    @staticmethod
+    def _as_wire_block(block):
+        if isinstance(block, str):
+            block = protocol.parse_block(block)
+        return protocol.block_to_wire(block)
+
+    # -- endpoints ---------------------------------------------------------
+    def ping(self) -> bool:
+        return self._unwrap(self._call({"op": "ping"})) == "pong"
+
+    def uarches(self) -> list[str]:
+        return self._unwrap(self._call({"op": "uarches"}))
+
+    def stats(self) -> dict:
+        return self._unwrap(self._call({"op": "stats"}))
+
+    def reload(self, uarch: str | None = None) -> list[str]:
+        msg = {"op": "reload"}
+        if uarch is not None:
+            msg["uarch"] = uarch
+        return self._unwrap(self._call(msg))
+
+    def validate(self, uarch: str, block) -> list[str]:
+        """Variant names in ``block`` the uarch's model cannot predict."""
+        return self._unwrap(self._call({"op": "validate", "uarch": uarch,
+                                        "block": self._as_wire_block(block)}))
+
+    def predict(self, uarch: str, block, *, raw: bool = False):
+        """Predict one block (textual format or list of Instr). Returns the
+        prediction dict; with ``raw=True`` returns the full response
+        envelope instead of raising on structured errors."""
+        resp = self._call({"op": "predict", "uarch": uarch,
+                           "block": self._as_wire_block(block)})
+        return resp if raw else self._unwrap(resp)
+
+    def predict_batch(self, uarch: str, blocks) -> list[dict]:
+        """Predict many blocks in one request. Returns the per-block
+        response envelopes (callers pick apart ok/error per block)."""
+        wire = [self._as_wire_block(b) for b in blocks]
+        return self._unwrap(self._call({"op": "predict_batch",
+                                        "uarch": uarch, "blocks": wire}))
+
+    def predict_all(self, block) -> dict:
+        """The CLI's sweep: one prediction per served uarch."""
+        return {ua: self.predict(ua, block, raw=True)
+                for ua in self.uarches()}
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        for f in (self._rfile, self._wfile):
+            with contextlib.suppress(OSError):
+                f.close()
+        with contextlib.suppress(OSError):
+            self._sock.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+@contextlib.contextmanager
+def local_service(models_dir, **service_kw):
+    """Start server + client against ``models_dir`` on an ephemeral local
+    port; yields the connected client, tears everything down after."""
+    from repro.service.server import start_server  # noqa: PLC0415
+
+    server = start_server(models_dir, **service_kw)
+    client = ServiceClient(server.host, server.port)
+    try:
+        yield client
+    finally:
+        client.close()
+        server.close()

@@ -1,0 +1,152 @@
+"""Wire protocol and textual block format for uops-as-a-service.
+
+Dependency-free by design (stdlib json + sockets only): the service is the
+thing other tools talk *to*, so it must not drag the measurement stack's
+optional dependencies along.
+
+Textual basic-block format (the CLI's input), one instruction per line::
+
+    # comment
+    IMUL_R64_R64 op1=R0 op2=R1
+    DIV_R64 op1=R0 op2=R3 hi=R4 !high
+
+``name=reg`` assigns an architectural register to an operand; ``!high``
+selects the high divider operand class (§5.2.5 value hint).
+
+Wire format: newline-delimited JSON messages over a TCP stream. Requests
+are ``{"op": ..., ...}``; responses are ``{"ok": true, "result": ...}`` or
+``{"ok": false, "error": {"type": ..., "message": ..., ...}}`` — the typed
+:class:`~repro.core.predictor.UnknownInstructionError` travels as a
+structured error carrying the missing variant names.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.core.predictor import Prediction, UnknownInstructionError
+from repro.core.simulator import Instr
+
+PROTOCOL_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# textual block format
+# ---------------------------------------------------------------------------
+
+
+class BlockParseError(ValueError):
+    pass
+
+
+def parse_block(text: str, isa=None) -> list[Instr]:
+    """Parse the textual block format into Instr instances. With ``isa``
+    given, unknown variant names are rejected at parse time."""
+    code: list[Instr] = []
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        line = raw.split("#", 1)[0].strip()
+        if not line:
+            continue
+        parts = line.split()
+        spec, args = parts[0], parts[1:]
+        if isa is not None and spec not in isa:
+            raise BlockParseError(f"line {lineno}: unknown instruction "
+                                  f"variant {spec!r}")
+        regs: dict[str, str] = {}
+        value_hint = "low"
+        for tok in args:
+            if tok == "!high":
+                value_hint = "high"
+            elif tok == "!low":
+                value_hint = "low"
+            elif "=" in tok:
+                k, _, v = tok.partition("=")
+                regs[k] = v
+            else:
+                raise BlockParseError(f"line {lineno}: cannot parse operand "
+                                      f"token {tok!r} (expected name=reg or "
+                                      f"!high/!low)")
+        code.append(Instr(spec, regs, value_hint))
+    return code
+
+
+def format_block(code) -> str:
+    """Inverse of :func:`parse_block`."""
+    lines = []
+    for ins in code:
+        toks = [ins.spec] + [f"{k}={v}" for k, v in ins.regs.items()]
+        if ins.value_hint != "low":
+            toks.append(f"!{ins.value_hint}")
+        lines.append(" ".join(toks))
+    return "\n".join(lines)
+
+
+def block_key(uarch: str, code):
+    """Hashable cache key: uarch + canonical (operand-order-free) block
+    form. A nested tuple, not a string — building it is the hot path of a
+    warm-cache hit, and tuple construction beats string formatting ~2x
+    (``canonical_code`` stays the human-readable / persistent form)."""
+    return (uarch, tuple((i.spec, tuple(sorted(i.regs.items())),
+                          i.value_hint) for i in code))
+
+
+# ---------------------------------------------------------------------------
+# JSON encoding of Instr / Prediction / errors
+# ---------------------------------------------------------------------------
+
+
+def instr_to_wire(ins: Instr) -> dict:
+    return {"spec": ins.spec, "regs": dict(ins.regs),
+            "value_hint": ins.value_hint}
+
+
+def instr_from_wire(d: dict) -> Instr:
+    return Instr(d["spec"], dict(d.get("regs") or {}),
+                 d.get("value_hint", "low"))
+
+
+def block_to_wire(code) -> list:
+    return [instr_to_wire(i) for i in code]
+
+
+def block_from_wire(items) -> list:
+    return [instr_from_wire(d) for d in items]
+
+
+def prediction_to_dict(p: Prediction) -> dict:
+    return {"cycles": p.cycles, "port_bound": p.port_bound,
+            "latency_bound": p.latency_bound,
+            "frontend_bound": p.frontend_bound,
+            "port_pressure": dict(p.port_pressure),
+            "bottleneck": p.bottleneck}
+
+
+def error_to_dict(exc: BaseException) -> dict:
+    out = {"type": type(exc).__name__, "message": str(exc)}
+    if isinstance(exc, UnknownInstructionError):
+        out["missing"] = list(exc.missing)
+        out["uarch"] = exc.uarch
+    for attr in ("available", "uarch"):
+        if attr not in out and hasattr(exc, attr):
+            out[attr] = getattr(exc, attr)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# framing: newline-delimited JSON over a socket file
+# ---------------------------------------------------------------------------
+
+
+def send_msg(wfile, obj) -> None:
+    wfile.write((json.dumps(obj, separators=(",", ":")) + "\n").encode())
+    wfile.flush()
+
+
+def recv_msg(rfile):
+    """Next message, or None on EOF."""
+    line = rfile.readline()
+    if not line:
+        return None
+    line = line.strip()
+    if not line:
+        return None
+    return json.loads(line.decode() if isinstance(line, bytes) else line)

@@ -1,0 +1,486 @@
+"""The uops-as-a-service backend: coalescing, caching prediction service
+plus a dependency-free threaded TCP front end.
+
+:class:`PredictionService` is the in-process core. Requests submitted one at
+a time are *coalesced*: a background worker drains the queue for a short
+window and hands whole per-uarch groups to the vectorized
+:class:`~repro.service.batch_predictor.BatchPredictor`, so a burst of
+single-block queries costs one array pass, not N predictor calls. Results
+land in an LRU cache keyed by ``(model version, uarch, canonical block)``
+— the canonical form is operand-order-free, and including the registry's
+model version means a hot reload implicitly invalidates every stale entry.
+
+:class:`PredictionServer` wraps the service in a ``socketserver``
+ThreadingTCPServer speaking the newline-delimited JSON protocol
+(``protocol.py``). Endpoints: predict, predict_batch, uarches, stats,
+reload, ping. Per-endpoint stats (request counts, error counts, cache hit
+rate, p50/p99 latency, coalesced batch sizes) are served by ``stats``.
+"""
+from __future__ import annotations
+
+import queue
+import socketserver
+import threading
+import time
+from collections import OrderedDict, deque
+from concurrent.futures import Future
+
+from repro.core.isa import TEST_ISA
+from repro.core.predictor import UnknownInstructionError, missing_specs
+from repro.service import protocol
+from repro.service.batch_predictor import BatchPredictor
+from repro.service.registry import ModelRegistry
+
+
+class LRUCache:
+    """Thread-safe LRU mapping with hit/miss counters."""
+
+    def __init__(self, capacity: int = 4096):
+        self.capacity = capacity
+        self._d: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        with self._lock:
+            try:
+                val = self._d.pop(key)
+            except KeyError:
+                self.misses += 1
+                return None
+            self._d[key] = val
+            self.hits += 1
+            return val
+
+    def get_many(self, keys) -> list:
+        """One lock acquisition for a whole batch of lookups."""
+        with self._lock:
+            out = []
+            for key in keys:
+                try:
+                    val = self._d.pop(key)
+                except KeyError:
+                    self.misses += 1
+                    out.append(None)
+                else:
+                    self._d[key] = val
+                    self.hits += 1
+                    out.append(val)
+            return out
+
+    def put(self, key, val) -> None:
+        with self._lock:
+            self._d.pop(key, None)
+            self._d[key] = val
+            while len(self._d) > self.capacity:
+                self._d.popitem(last=False)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._d)
+
+    def stats(self) -> dict:
+        with self._lock:
+            total = self.hits + self.misses
+            return {"size": len(self._d), "capacity": self.capacity,
+                    "hits": self.hits, "misses": self.misses,
+                    "hit_rate": round(self.hits / max(1, total), 4)}
+
+
+class EndpointStats:
+    """Counts + bounded latency reservoir with p50/p99 summaries."""
+
+    def __init__(self, keep: int = 4096):
+        self.requests = 0
+        self.errors = 0
+        self._lat = deque(maxlen=keep)
+        self._lock = threading.Lock()
+
+    def observe(self, seconds: float, *, error: bool = False) -> None:
+        with self._lock:
+            self.requests += 1
+            self.errors += int(error)
+            self._lat.append(seconds)
+
+    def observe_many(self, seconds_each: float, n: int, errors: int) -> None:
+        """n requests that shared one batched pass, one lock acquisition."""
+        with self._lock:
+            self.requests += n
+            self.errors += errors
+            self._lat.extend([seconds_each] * n)
+
+    @staticmethod
+    def _pct(vals: list, q: float) -> float:
+        idx = min(len(vals) - 1, max(0, round(q * (len(vals) - 1))))
+        return vals[idx]
+
+    def summary(self) -> dict:
+        with self._lock:
+            vals = sorted(self._lat)
+            out = {"requests": self.requests, "errors": self.errors}
+            if vals:
+                out["p50_us"] = round(self._pct(vals, 0.50) * 1e6, 1)
+                out["p99_us"] = round(self._pct(vals, 0.99) * 1e6, 1)
+            return out
+
+
+class _Coalescer:
+    """Background worker turning single predicts into per-uarch batches.
+
+    Batching is *natural*: the worker drains whatever is already queued and
+    serves it as one batch — under load, batches form because serving takes
+    time while new requests queue; an idle single request pays no artificial
+    delay. ``window_s > 0`` additionally holds a lone request back up to
+    that long hoping for company (higher latency, bigger batches)."""
+
+    def __init__(self, service: "PredictionService", max_batch: int,
+                 window_s: float):
+        self.service = service
+        self.max_batch = max_batch
+        self.window_s = window_s
+        self.queue: queue.Queue = queue.Queue()
+        self.batch_sizes: deque = deque(maxlen=4096)
+        self.batches = 0
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self.closed = False          # guarded by _submit_lock
+        self._submit_lock = threading.Lock()
+
+    @staticmethod
+    def _closed_response() -> dict:
+        return {"ok": False, "error": {"type": "ServiceClosed",
+                                       "message": "service closed before "
+                                       "the request was served"}}
+
+    def start(self) -> None:
+        if self._thread is None:
+            with self._submit_lock:
+                self.closed = False
+            self._stop.clear()  # a stopped coalescer must be restartable
+            self._thread = threading.Thread(target=self._run, daemon=True,
+                                            name="uops-coalescer")
+            self._thread.start()
+
+    def submit(self, item) -> None:
+        """Enqueue under the close lock: a submit racing stop() either
+        lands before the drain or is refused, never abandoned."""
+        with self._submit_lock:
+            if self.closed:
+                item[2].set_result(self._closed_response())
+            else:
+                self.queue.put(item)
+
+    def stop(self) -> None:
+        self._stop.set()
+        self.queue.put(None)  # wake the worker
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+        # fail pending futures instead of abandoning their callers; the
+        # lock closes the submit-after-drain window
+        with self._submit_lock:
+            self.closed = True
+            while True:
+                try:
+                    item = self.queue.get_nowait()
+                except queue.Empty:
+                    break
+                if item is not None and not item[2].done():
+                    item[2].set_result(self._closed_response())
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                item = self.queue.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            if item is None:
+                continue
+            batch = [item]
+            deadline = time.monotonic() + self.window_s
+            while len(batch) < self.max_batch:
+                try:
+                    nxt = self.queue.get_nowait()
+                except queue.Empty:
+                    left = deadline - time.monotonic()
+                    if left <= 0:
+                        break
+                    try:
+                        nxt = self.queue.get(timeout=left)
+                    except queue.Empty:
+                        break
+                if nxt is None:
+                    break
+                batch.append(nxt)
+            self.batches += 1
+            self.batch_sizes.append(len(batch))
+            groups: dict[str, list] = {}
+            for uarch, code, fut in batch:
+                groups.setdefault(uarch, []).append((code, fut))
+            for uarch, entries in groups.items():
+                codes = [c for c, _ in entries]
+                try:
+                    results = self.service._serve_group(uarch, codes)
+                except Exception as e:  # noqa: BLE001 - the worker thread
+                    # must survive anything (a dead coalescer hangs every
+                    # future client); unexpected errors become responses
+                    err = {"ok": False, "error": protocol.error_to_dict(e)}
+                    results = [err] * len(entries)
+                for (_, fut), res in zip(entries, results):
+                    if not fut.done():
+                        fut.set_result(res)
+
+    def stats(self) -> dict:
+        sizes = list(self.batch_sizes)
+        out = {"batches": self.batches, "queued": self.queue.qsize()}
+        if sizes:
+            out["mean_batch"] = round(sum(sizes) / len(sizes), 2)
+            out["max_batch"] = max(sizes)
+        return out
+
+
+class PredictionService:
+    """In-process service: registry + per-uarch batch predictors + cache."""
+
+    def __init__(self, registry: ModelRegistry, isa=None, *,
+                 issue_width: int = 4, cache_size: int = 4096,
+                 max_batch: int = 64, batch_window_s: float = 0.0,
+                 start: bool = True):
+        self.registry = registry
+        self.isa = isa if isa is not None else TEST_ISA
+        self.issue_width = issue_width
+        self.cache = LRUCache(cache_size)
+        self.dedup_hits = 0  # identical requests coalesced within one wave
+        self.endpoints: dict[str, EndpointStats] = {}
+        self._predictors: dict[str, tuple[int, BatchPredictor]] = {}
+        self._plock = threading.Lock()
+        self.coalescer = _Coalescer(self, max_batch, batch_window_s)
+        self.started = time.time()
+        if start:
+            self.start()
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> None:
+        self.coalescer.start()
+
+    def close(self) -> None:
+        self.coalescer.stop()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- predictors / hot reload ------------------------------------------
+    def _predictor(self, uarch: str) -> tuple[int, BatchPredictor]:
+        handle = self.registry.get(uarch)  # stats + hot reload happen here
+        with self._plock:
+            cached = self._predictors.get(uarch)
+            if cached is not None and cached[0] == handle.version:
+                return cached
+            bp = BatchPredictor(handle.model, self.isa, self.issue_width)
+            self._predictors[uarch] = (handle.version, bp)
+            return self._predictors[uarch]
+
+    # -- core serving ------------------------------------------------------
+    def _serve_group(self, uarch: str, codes: list) -> list[dict]:
+        """Answer many blocks for one uarch: cache lookups, one batched
+        predictor pass over the misses, structured errors per block."""
+        try:
+            version, bp = self._predictor(uarch)
+        except Exception as e:  # noqa: BLE001 - registry/artifact failures
+            # (missing model, stale fingerprint, XML ParseError from a
+            # half-written artifact, races with file deletion...) must come
+            # back as structured errors, never escape into the worker
+            err = {"ok": False, "error": protocol.error_to_dict(e)}
+            return [err] * len(codes)
+        keys = [(version, protocol.block_key(uarch, c)) for c in codes]
+        out: list = [None] * len(codes)
+        unique: dict = {}   # key -> first index needing computation
+        dups: dict = {}     # index -> representative index
+        hits = self.cache.get_many(keys)
+        for i, (k, hit) in enumerate(zip(keys, hits)):
+            if hit is not None:
+                out[i] = hit
+            elif k in unique:
+                dups[i] = unique[k]  # identical in-flight request: compute once
+            else:
+                unique[k] = i
+        if dups:
+            with self._plock:
+                self.dedup_hits += len(dups)
+        if unique:
+            miss_idx = list(unique.values())
+            results = bp.predict_batch([codes[i] for i in miss_idx],
+                                       on_error="return")
+            for i, res in zip(miss_idx, results):
+                if isinstance(res, UnknownInstructionError):
+                    out[i] = {"ok": False,
+                              "error": protocol.error_to_dict(res)}
+                else:
+                    out[i] = {"ok": True, "uarch": uarch,
+                              "result": protocol.prediction_to_dict(res)}
+                    self.cache.put(keys[i], out[i])
+        for i, rep in dups.items():
+            out[i] = out[rep]
+        return out
+
+    def _stats_for(self, endpoint: str) -> EndpointStats:
+        st = self.endpoints.get(endpoint)
+        if st is None:
+            st = self.endpoints.setdefault(endpoint, EndpointStats())
+        return st
+
+    # -- public API --------------------------------------------------------
+    @staticmethod
+    def _copy_env(env: dict) -> dict:
+        """Fresh response envelope: cached entries (and dedup aliases, for
+        results and errors alike) are shared, so in-process callers get a
+        copy they may mutate without poisoning the LRU cache."""
+        out = dict(env)
+        if "result" in out:
+            res = dict(out["result"])
+            if "port_pressure" in res:
+                res["port_pressure"] = dict(res["port_pressure"])
+            out["result"] = res
+        if "error" in out:
+            out["error"] = dict(out["error"])
+        return out
+
+    def submit(self, uarch: str, code) -> Future:
+        """Enqueue one block for coalesced prediction. The future resolves
+        once a worker is running (``start()``); on ``close()`` pending
+        futures resolve to a structured ServiceClosed error."""
+        fut: Future = Future()
+        self.coalescer.submit((uarch, list(code), fut))
+        return fut
+
+    def predict(self, uarch: str, code) -> dict:
+        t0 = time.perf_counter()
+        res = self.submit(uarch, code).result()
+        self._stats_for("predict").observe(time.perf_counter() - t0,
+                                           error=not res.get("ok"))
+        return self._copy_env(res)
+
+    def predict_batch(self, uarch: str, blocks) -> list[dict]:
+        """Explicitly batched path (one request, many blocks): bypasses the
+        coalescing queue but shares cache and predictors."""
+        t0 = time.perf_counter()
+        blocks = [list(b) for b in blocks]
+        out = self._serve_group(uarch, blocks)
+        dt = time.perf_counter() - t0
+        per = dt / max(1, len(blocks))
+        self._stats_for("predict_batch").observe_many(
+            per, len(out), sum(1 for r in out if not r.get("ok")))
+        return [self._copy_env(r) for r in out]
+
+    def uarches(self) -> list[str]:
+        return self.registry.uarches()
+
+    def reload(self, uarch: str | None = None) -> list[str]:
+        return self.registry.reload(uarch)
+
+    def validate_block(self, uarch: str, code) -> list[str]:
+        """Missing variant names for a block, without predicting."""
+        return missing_specs(self.registry.get(uarch).model, code)
+
+    def stats(self) -> dict:
+        return {
+            "uptime_s": round(time.time() - self.started, 1),
+            "endpoints": {k: v.summary()
+                          for k, v in list(self.endpoints.items())},
+            "cache": {**self.cache.stats(), "dedup_hits": self.dedup_hits},
+            "coalescer": self.coalescer.stats(),
+            "registry": self.registry.stats(),
+        }
+
+
+# ---------------------------------------------------------------------------
+# TCP front end
+# ---------------------------------------------------------------------------
+
+
+class _Handler(socketserver.StreamRequestHandler):
+    def handle(self) -> None:
+        service: PredictionService = self.server.service  # type: ignore
+        while True:
+            try:
+                msg = protocol.recv_msg(self.rfile)
+            except (ValueError, OSError):
+                break
+            if msg is None:
+                break
+            try:
+                resp = self._dispatch(service, msg)
+            except Exception as e:  # never kill the connection on one op
+                resp = {"ok": False, "error": protocol.error_to_dict(e)}
+            try:
+                protocol.send_msg(self.wfile, resp)
+            except OSError:
+                break
+
+    @staticmethod
+    def _dispatch(service: PredictionService, msg: dict) -> dict:
+        op = msg.get("op")
+        if op == "ping":
+            return {"ok": True, "result": "pong",
+                    "version": protocol.PROTOCOL_VERSION}
+        if op == "uarches":
+            return {"ok": True, "result": service.uarches()}
+        if op == "stats":
+            return {"ok": True, "result": service.stats()}
+        if op == "reload":
+            return {"ok": True,
+                    "result": service.reload(msg.get("uarch"))}
+        if op == "validate":
+            code = protocol.block_from_wire(msg["block"])
+            return {"ok": True,
+                    "result": service.validate_block(msg["uarch"], code)}
+        if op == "predict":
+            code = protocol.block_from_wire(msg["block"])
+            return service.predict(msg["uarch"], code)
+        if op == "predict_batch":
+            blocks = [protocol.block_from_wire(b) for b in msg["blocks"]]
+            return {"ok": True,
+                    "result": service.predict_batch(msg["uarch"], blocks)}
+        return {"ok": False, "error": {"type": "BadRequest",
+                                       "message": f"unknown op {op!r}"}}
+
+
+class _TCPServer(socketserver.ThreadingTCPServer):
+    allow_reuse_address = True
+    daemon_threads = True
+
+
+class PredictionServer:
+    """Threaded TCP server around a :class:`PredictionService`."""
+
+    def __init__(self, service: PredictionService, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.service = service
+        self._tcp = _TCPServer((host, port), _Handler)
+        self._tcp.service = service  # type: ignore[attr-defined]
+        self.host, self.port = self._tcp.server_address[:2]
+        self._thread = threading.Thread(target=self._tcp.serve_forever,
+                                        daemon=True, name="uops-server")
+        self._thread.start()
+
+    def close(self) -> None:
+        self._tcp.shutdown()
+        self._tcp.server_close()
+        self.service.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def start_server(models_dir, host: str = "127.0.0.1", port: int = 0,
+                 **service_kw) -> PredictionServer:
+    """Registry → service → TCP server, in one call."""
+    service = PredictionService(ModelRegistry(models_dir), **service_kw)
+    return PredictionServer(service, host, port)

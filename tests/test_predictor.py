@@ -84,3 +84,19 @@ def test_port_pressure_reported(skl_model):
     code = [Instr("MOVQ2DQ_X_X", {"op1": "X0", "op2": "X1"})]
     p = predict(skl_model, TEST_ISA, code)
     assert p.port_pressure["0"] > 1.0  # 1 pinned + share of p015
+
+
+def test_unknown_instruction_raises_typed_error(skl_model):
+    """An uncharacterized variant must surface as UnknownInstructionError
+    (listing the missing specs), not a bare KeyError from PerfModel."""
+    from repro.core.predictor import UnknownInstructionError
+
+    code = [Instr("ADD_R64_R64", {"op1": "R0", "op2": "R1"}),
+            Instr("LFENCE", {}),  # serializing: never characterized (§8)
+            Instr("JMP_R64", {"op1": "R2"})]
+    with pytest.raises(UnknownInstructionError) as ei:
+        predict(skl_model, TEST_ISA, code)
+    assert ei.value.missing == ["JMP_R64", "LFENCE"]
+    assert "JMP_R64" in str(ei.value)
+    with pytest.raises(UnknownInstructionError):
+        LegacyAnalyzer(skl_model, TEST_ISA).predict(code)

@@ -1,0 +1,350 @@
+"""uops-as-a-service: registry, vectorized batch predictor, server.
+
+The load-bearing guarantees:
+  * predictions served from registry-loaded XML artifacts are *identical*
+    to predictions from the in-memory PerfModel (round-trip + service
+    path), for every simulated uarch;
+  * the batched predictor agrees bit-for-bit with the single-block
+    reference on randomized blocks;
+  * uncharacterized instructions surface as typed / structured errors,
+    never bare KeyErrors.
+"""
+import os
+import threading
+
+import pytest
+
+from repro.core import model_io
+from repro.core.engine import Campaign
+from repro.core.isa import TEST_ISA
+from repro.core.predictor import UnknownInstructionError, predict
+from repro.core.simulator import Instr, SimMachine
+from repro.core.uarch import SIM_UARCHES
+from repro.service.batch_predictor import BatchPredictor
+from repro.service.client import ServiceClient, local_service
+from repro.service.protocol import (format_block, parse_block,
+                                    prediction_to_dict)
+from repro.service.registry import (ModelNotFoundError, ModelRegistry,
+                                    StaleModelError)
+from repro.service.server import (PredictionServer, PredictionService,
+                                  start_server)
+from repro.service.workload import random_blocks
+
+SERVICE_NAMES = [
+    "ADD_R64_R64", "IMUL_R64_R64", "MUL_R64", "ADC_R64_R64", "CMC",
+    "TEST_R64_R64", "SHLD_R64_R64_I8", "MOVQ2DQ_X_X", "AESDEC_X_X",
+    "PSHUFD_X_X", "PADDD_X_X", "MOV_R64_M64",
+]
+
+
+@pytest.fixture(scope="module")
+def campaign_models():
+    machines = [SimMachine(ua, TEST_ISA) for ua in SIM_UARCHES.values()]
+    return Campaign(instr_names=SERVICE_NAMES).run(machines, TEST_ISA).models
+
+
+@pytest.fixture(scope="module")
+def model_dir(campaign_models, tmp_path_factory):
+    out = tmp_path_factory.mktemp("models")
+    for name, model in campaign_models.items():
+        (out / f"{name}.xml").write_text(model_io.to_xml(model, TEST_ISA))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_serves_all_sim_uarches(model_dir, campaign_models):
+    reg = ModelRegistry(model_dir)
+    assert reg.uarches() == sorted(SIM_UARCHES)
+    for name in SIM_UARCHES:
+        h = reg.get(name)
+        assert h.model.uarch == name
+        assert h.model.fingerprint == campaign_models[name].fingerprint
+        assert set(h.model.instructions) == set(
+            campaign_models[name].instructions)
+    # lazy: second get returns the same handle, no reload
+    v = reg.get("sim_skl").version
+    assert reg.get("sim_skl").version == v
+    assert reg.hot_reloads == 0
+
+
+def test_registry_missing_uarch(model_dir):
+    reg = ModelRegistry(model_dir)
+    with pytest.raises(ModelNotFoundError) as ei:
+        reg.get("sim_icl")
+    assert "sim_skl" in str(ei.value)
+
+
+def test_registry_serves_json_artifacts(tmp_path, campaign_models):
+    """JSON export is a first-class artifact: a JSON-only registry serves
+    predictions identical to the in-memory model."""
+    model = campaign_models["sim_skl"]
+    (tmp_path / "sim_skl.json").write_text(model_io.to_json(model))
+    reg = ModelRegistry(tmp_path)
+    assert reg.uarches() == ["sim_skl"]
+    loaded = reg.get("sim_skl").model
+    assert loaded.fingerprint == model.fingerprint
+    for code in random_blocks(model, TEST_ISA, 8, seed=5):
+        assert predict(loaded, TEST_ISA, code) == \
+            predict(model, TEST_ISA, code)
+    # measurement caches in the same dir are never mistaken for models
+    (tmp_path / "sim_skl.meas.json").write_text("{}")
+    assert reg.uarches() == ["sim_skl"]
+
+
+def test_service_errors_pickle_roundtrip():
+    import pickle
+
+    e = pickle.loads(pickle.dumps(
+        ModelNotFoundError("sim_icl", ["sim_skl"])))
+    assert isinstance(e, ModelNotFoundError)
+    assert e.available == ["sim_skl"]
+    assert "sim_icl" in str(e)
+    e2 = pickle.loads(pickle.dumps(
+        UnknownInstructionError(["FOO"], "sim_skl")))
+    assert e2.missing == ["FOO"]
+    assert str(e2) == "model sim_skl has no characterization for: FOO"
+
+
+def test_registry_rejects_stale_fingerprint(model_dir):
+    reg = ModelRegistry(model_dir,
+                        expected_fingerprints={"sim_skl": "deadbeef"})
+    with pytest.raises(StaleModelError):
+        reg.get("sim_skl")
+    # validation off: the same artifact loads
+    reg2 = ModelRegistry(model_dir, validate=False,
+                         expected_fingerprints={"sim_skl": "deadbeef"})
+    assert reg2.get("sim_skl").model.uarch == "sim_skl"
+
+
+def test_registry_hot_reload(model_dir, campaign_models):
+    reg = ModelRegistry(model_dir)
+    h1 = reg.get("sim_hsw")
+    # a re-characterization campaign rewrites the artifact: drop one instr
+    model = campaign_models["sim_hsw"]
+    pruned = model_io.load_xml(model_io.to_xml(model, TEST_ISA))
+    del pruned.instructions["CMC"]
+    path = model_dir / "sim_hsw.xml"
+    path.write_text(model_io.to_xml(pruned, TEST_ISA))
+    os.utime(path, ns=(h1.mtime_ns + 10**9, h1.mtime_ns + 10**9))
+    h2 = reg.get("sim_hsw")
+    assert h2.version > h1.version
+    assert "CMC" not in h2.model.instructions
+    assert reg.hot_reloads == 1
+    # restore for the other module-scoped tests
+    path.write_text(model_io.to_xml(model, TEST_ISA))
+
+
+# ---------------------------------------------------------------------------
+# batch predictor vs single-block reference
+# ---------------------------------------------------------------------------
+
+
+def test_batch_matches_reference_bit_for_bit(campaign_models):
+    for name, model in campaign_models.items():
+        blocks = random_blocks(model, TEST_ISA, 30, seed=11)
+        bp = BatchPredictor(model, TEST_ISA)
+        batch = bp.predict_batch(blocks)
+        for code, got in zip(blocks, batch):
+            ref = predict(model, TEST_ISA, code)
+            assert got == ref, (name, code)
+            # exact float equality on every field, not approx
+            assert (got.cycles, got.port_bound, got.latency_bound,
+                    got.frontend_bound) == (ref.cycles, ref.port_bound,
+                                            ref.latency_bound,
+                                            ref.frontend_bound)
+
+
+def test_batch_single_block_api(campaign_models):
+    model = campaign_models["sim_skl"]
+    code = [Instr("IMUL_R64_R64", {"op1": "R0", "op2": "R1"})]
+    assert BatchPredictor(model, TEST_ISA).predict(code) == \
+        predict(model, TEST_ISA, code)
+
+
+def test_unknown_instruction_is_typed(campaign_models):
+    model = campaign_models["sim_skl"]
+    code = [Instr("ADD_R64_R64", {"op1": "R0", "op2": "R1"}),
+            Instr("DIVPS_X_X", {"op1": "X0", "op2": "X1"}),
+            Instr("SETC_R8", {"op1": "R2"})]
+    with pytest.raises(UnknownInstructionError) as ei:
+        predict(model, TEST_ISA, code)
+    assert ei.value.missing == ["DIVPS_X_X", "SETC_R8"]
+    assert ei.value.uarch == "sim_skl"
+    assert isinstance(ei.value, KeyError)  # old except-clauses keep working
+    # batch: on_error="return" keeps good blocks flowing
+    bp = BatchPredictor(model, TEST_ISA)
+    good = [Instr("CMC", {})]
+    out = bp.predict_batch([code, good], on_error="return")
+    assert isinstance(out[0], UnknownInstructionError)
+    assert out[1] == predict(model, TEST_ISA, good)
+    # characterized under a fuller ISA than we serve with: still typed
+    import copy
+
+    wider = copy.copy(model)
+    wider.instructions = dict(model.instructions)
+    wider.instructions["PHANTOM_OP"] = wider.instructions["CMC"]
+    with pytest.raises(UnknownInstructionError) as ei:
+        predict(wider, TEST_ISA, [Instr("PHANTOM_OP", {})])
+    assert ei.value.missing == ["PHANTOM_OP"]
+
+
+# ---------------------------------------------------------------------------
+# the e2e agreement guarantee: XML round-trip + service path
+# ---------------------------------------------------------------------------
+
+
+def test_served_predictions_identical_to_in_memory(model_dir,
+                                                   campaign_models):
+    with local_service(model_dir) as client:
+        assert client.uarches() == sorted(SIM_UARCHES)
+        for uarch in SIM_UARCHES:
+            model = campaign_models[uarch]
+            blocks = random_blocks(model, TEST_ISA, 12, seed=23)
+            served = client.predict_batch(uarch, blocks)
+            for code, env in zip(blocks, served):
+                assert env["ok"], env
+                ref = prediction_to_dict(predict(model, TEST_ISA, code))
+                assert env["result"] == ref, (uarch, code)
+
+
+def test_service_structured_error_and_single_path(model_dir):
+    with local_service(model_dir) as client:
+        env = client.predict(
+            "sim_skl",
+            [Instr("DIV_R64", {"op1": "R0", "op2": "R1", "hi": "R2"})],
+            raw=True)
+        assert env["ok"] is False
+        assert env["error"]["type"] == "UnknownInstructionError"
+        assert env["error"]["missing"] == ["DIV_R64"]
+        assert env["error"]["uarch"] == "sim_skl"
+        # unknown uarch is structured too
+        env = client.predict("sim_icl", "CMC", raw=True)
+        assert env["ok"] is False
+        assert env["error"]["type"] == "ModelNotFoundError"
+        # text-format single predict works end to end
+        res = client.predict("sim_skl", "IMUL_R64_R64 op1=R0 op2=R1")
+        assert res["cycles"] == pytest.approx(3.0)
+        assert res["bottleneck"] == "latency"
+        # validate endpoint: missing specs without predicting
+        assert client.validate("sim_skl", "CMC") == []
+        assert client.validate(
+            "sim_skl", "CMC\nDIV_R64 op1=R0 op2=R1 hi=R2") == ["DIV_R64"]
+
+
+def test_service_cache_hits_and_stats(model_dir):
+    with local_service(model_dir) as client:
+        block = "ADD_R64_R64 op1=R0 op2=R1"
+        for _ in range(5):
+            client.predict("sim_skl", block)
+        st = client.stats()
+        assert st["cache"]["hits"] >= 4
+        ep = st["endpoints"]["predict"]
+        assert ep["requests"] >= 5
+        assert "p50_us" in ep and "p99_us" in ep
+        assert st["registry"]["loaded"].get("sim_skl")
+
+
+def test_service_coalesces_queued_requests(model_dir):
+    # worker not started: enqueue first, then start -> one batched pass
+    service = PredictionService(ModelRegistry(model_dir), start=False,
+                                batch_window_s=0.05)
+    code = [Instr("CMC", {})]
+    futs = [service.submit("sim_skl", code) for _ in range(10)]
+    service.start()
+    results = [f.result(timeout=10) for f in futs]
+    service.close()
+    assert all(r["ok"] for r in results)
+    cs = service.coalescer.stats()
+    assert cs["max_batch"] >= 2  # requests were coalesced, not serialized
+    # identical requests in one wave are computed once and shared
+    assert service.dedup_hits + service.cache.stats()["hits"] >= 9
+    # close() -> start() must yield a live worker again
+    service.start()
+    assert service.submit("sim_skl", code).result(timeout=10)["ok"]
+    service.close()
+
+
+def test_close_resolves_pending_futures(model_dir):
+    service = PredictionService(ModelRegistry(model_dir), start=False)
+    futs = [service.submit("sim_skl", [Instr("CMC", {})]) for _ in range(3)]
+    service.close()  # never started: futures must not be abandoned
+    for f in futs:
+        res = f.result(timeout=5)
+        assert res["ok"] is False
+        assert res["error"]["type"] == "ServiceClosed"
+
+
+def test_cached_responses_are_not_aliased(model_dir):
+    service = PredictionService(ModelRegistry(model_dir), start=False)
+    block = [Instr("CMC", {})]
+    a = service.predict_batch("sim_skl", [block])[0]
+    a["result"]["cycles"] = -1.0  # caller mutates its copy...
+    b = service.predict_batch("sim_skl", [block])[0]  # ...cache unharmed
+    assert b["result"]["cycles"] > 0
+    service.close()
+
+
+def test_service_hot_reload_invalidates_cache(model_dir, campaign_models):
+    reg = ModelRegistry(model_dir)
+    with PredictionServer(PredictionService(reg)) as server:
+        client = ServiceClient(server.host, server.port)
+        before = client.predict("sim_snb", "CMC")
+        # rewrite the artifact (same content, new mtime) and force reload
+        path = model_dir / "sim_snb.xml"
+        st = path.stat()
+        path.write_text(model_io.to_xml(campaign_models["sim_snb"],
+                                        TEST_ISA))
+        os.utime(path, ns=(st.st_mtime_ns + 10**9, st.st_mtime_ns + 10**9))
+        assert "sim_snb" in client.reload("sim_snb")
+        after = client.predict("sim_snb", "CMC")
+        assert after == before  # same model content => same numbers
+        assert client.stats()["registry"]["hot_reloads"] >= 1
+        client.close()
+
+
+def test_concurrent_clients(model_dir):
+    server = start_server(model_dir)
+    errors = []
+
+    def worker(seed):
+        try:
+            with ServiceClient(server.host, server.port) as c:
+                for i in range(8):
+                    res = c.predict("sim_skl",
+                                    f"IMUL_R64_R64 op1=R{seed} op2=R{i}")
+                    assert res["cycles"] > 0
+        except Exception as e:  # pragma: no cover - surfaced below
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    server.close()
+    assert not errors
+
+
+# ---------------------------------------------------------------------------
+# protocol
+# ---------------------------------------------------------------------------
+
+
+def test_block_text_roundtrip():
+    text = ("# a comment\n"
+            "IMUL_R64_R64 op1=R0 op2=R1\n"
+            "\n"
+            "DIV_R64 op1=R0 op2=R3 hi=R4 !high\n")
+    code = parse_block(text, TEST_ISA)
+    assert [i.spec for i in code] == ["IMUL_R64_R64", "DIV_R64"]
+    assert code[1].value_hint == "high"
+    assert parse_block(format_block(code)) == code
+
+
+def test_parse_block_rejects_unknown_variant():
+    with pytest.raises(ValueError):
+        parse_block("NOT_AN_INSTR op1=R0", TEST_ISA)

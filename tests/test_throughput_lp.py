@@ -1,8 +1,11 @@
 """Throughput (§4.2 / §5.3): measured vs LP-computed, and the LP itself."""
+import random
+
 import pytest
 
 from repro.core.isa import TEST_ISA
-from repro.core.lp import _bisect_flow, throughput_lp
+from repro.core.lp import (_bisect_flow, cut_bound, port_bound_from_usage,
+                           throughput_lp, union_closure)
 from repro.core.throughput import computed_throughput, measure_throughput
 
 
@@ -30,6 +33,30 @@ def test_lp_matches_maxflow_fallback():
         ports = sorted(set().union(*u))
         assert throughput_lp(u) == pytest.approx(
             _bisect_flow(u, ports), abs=1e-4)
+
+
+def test_cut_bound_equals_lp_on_random_usages():
+    """The min-cut closed form (service fast path) is the LP optimum."""
+    rng = random.Random(0)
+    ports = "01234567"
+    for _ in range(150):
+        usage = {frozenset(rng.sample(ports, rng.randint(1, 4))):
+                 rng.randint(1, 6)
+                 for _ in range(rng.randint(1, 5))}
+        assert cut_bound(usage) == pytest.approx(throughput_lp(usage),
+                                                 abs=1e-6)
+        assert port_bound_from_usage(usage) == pytest.approx(
+            throughput_lp(usage), abs=1e-6)
+
+
+def test_union_closure():
+    combos = [frozenset("01"), frozenset("2"), frozenset("01")]
+    closed = union_closure(combos)
+    assert set(closed) == {frozenset("01"), frozenset("2"),
+                           frozenset("012")}
+    assert union_closure([frozenset(str(i)) for i in range(20)],
+                         cap=100) is None
+    assert union_closure([]) == []
 
 
 def test_measured_throughput_alu(skl_machine):
