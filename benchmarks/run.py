@@ -16,6 +16,8 @@ a human-readable table per benchmark. Paper mapping:
   table_zero_idioms         §7.3.6 — dependency-breaking idiom detection
   bench_lp                  §5.3.2 — LP solve rate
   bench_simulator           measurement-machine μop throughput
+  bench_batch_sim           vectorized measurement substrate: scalar loop
+                            vs NumPy vs jax batched backend, wave sweep
   bench_hardware_corpus     §6.2-analogue — real-JAX op corpus wall-clock
   bench_kernel_contention   blocking-kernel unit attribution harness
   table_roofline            §Roofline — dry-run roofline summary (if runs
@@ -361,6 +363,91 @@ def bench_kernel_contention():
     emit("bench_kernel_contention", us)
 
 
+BATCH_SIM_STATS: dict = {}
+
+
+def bench_batch_sim(smoke: bool = False):
+    """Wave execution: scalar per-experiment loop vs the batched array
+    backends, over a wave-size sweep. Each wave item is one Algorithm-2
+    experiment (body * n_small plus body * n_large), exactly what
+    ``MeasurementEngine.submit`` hands to ``run_batch``. Results are
+    checked bit-identical while being timed."""
+    import random
+    import time as _time
+
+    from repro.core.batch_sim import BatchSimMachine
+    from repro.core.isa import TEST_ISA
+    from repro.core.machine import RegPool, independent_seq
+    from repro.core.simulator import SimMachine
+    from repro.core.uarch import SIM_SKL
+
+    try:
+        import jax  # noqa: F401
+        have_jax = True
+    except ImportError:
+        have_jax = False
+
+    specs = ["ADD_R64_R64", "IMUL_R64_R64", "MOV_R64_R64",
+             "SHLD_R64_R64_I8", "PADDD_X_X", "MOV_R64_M64", "ADC_R64_R64",
+             "MULPS_X_X", "DIV_R64", "AESDEC_X_X"]
+    scalar = SimMachine(SIM_SKL, TEST_ISA)
+    sweep = (8,) if smoke else (32, 128, 256)
+    rows = []
+    print("\n== vectorized measurement substrate: wave-size sweep ==")
+    print(f"{'wave':>6s} {'scalar_s':>9s} {'numpy_s':>8s} {'np_x':>6s} "
+          f"{'jax_s':>8s} {'jax_x':>6s}")
+    for wave in sweep:
+        rng = random.Random(wave)
+        codes = []
+        for _ in range(wave):
+            body = independent_seq(TEST_ISA[rng.choice(specs)], RegPool(),
+                                   rng.randint(4, 12))
+            codes.append(body * 10)
+            codes.append(body * 110)
+        t0 = _time.perf_counter()
+        ref = [scalar.run(list(c)) for c in codes]
+        t_scalar = _time.perf_counter() - t0
+
+        def timed_backend(backend):
+            m = BatchSimMachine(SIM_SKL, TEST_ISA, backend=backend)
+            m.run_batch(codes)   # warm: recipe caches + jit shape buckets
+            t0 = _time.perf_counter()
+            got = m.run_batch(codes)
+            dt = _time.perf_counter() - t0
+            assert all(r.cycles == g.cycles and r.port_uops == g.port_uops
+                       for r, g in zip(ref, got)), \
+                f"{backend} backend diverged from the scalar oracle"
+            return dt
+
+        t_np = timed_backend("numpy")
+        t_jax = timed_backend("jax") if have_jax else None
+        np_x = t_scalar / t_np
+        jax_x = (t_scalar / t_jax) if t_jax else None
+        print(f"{wave:6d} {t_scalar:9.3f} {t_np:8.3f} {np_x:5.1f}x "
+              f"{t_jax if t_jax is not None else float('nan'):8.3f} "
+              f"{f'{jax_x:.1f}x' if jax_x else '---':>6s}")
+        emit(f"batch_sim_w{wave}_numpy", t_np * 1e6 / (2 * wave),
+             f"speedup={np_x:.1f}x")
+        if t_jax is not None:
+            emit(f"batch_sim_w{wave}_jax", t_jax * 1e6 / (2 * wave),
+                 f"speedup={jax_x:.1f}x")
+        rows.append({"wave": wave, "scalar_s": round(t_scalar, 4),
+                     "numpy_s": round(t_np, 4),
+                     "numpy_speedup": round(np_x, 2),
+                     "jax_s": round(t_jax, 4) if t_jax else None,
+                     "jax_speedup": round(jax_x, 2) if jax_x else None})
+    best = max(r["numpy_speedup"] for r in rows)
+    target_rows = [r for r in rows if r["wave"] >= 256]
+    meets = all(r["numpy_speedup"] >= 5 for r in target_rows) \
+        if target_rows else None
+    if meets is not None:
+        print(f"  wave>=256 numpy speedup "
+              f"{'meets' if meets else 'MISSES'} the >=5x target")
+    BATCH_SIM_STATS.update({"sweep": rows, "best_numpy_speedup": best,
+                            "meets_5x_target_at_256": meets,
+                            "jax_available": have_jax})
+
+
 CAMPAIGN_STATS: dict = {}
 
 
@@ -516,6 +603,28 @@ def bench_service_throughput():
     wire_rows = sweep_layer("wire", wire_chunk, (1, 64, 256),
                             make_wire, close_wire)
 
+    # simulate-backed mode: ground-truth steady-state cycles for a
+    # sub-wave of the workload, measured on the simulated core through
+    # its batched backend, judged against the analytic predictions
+    from repro.service.batch_predictor import BatchPredictor
+    bp = BatchPredictor(model, TEST_ISA, machine=machine)
+    sub = blocks[:64]
+    t0 = _time.perf_counter()
+    sim_cycles = bp.simulate_batch(sub)
+    sim_s = _time.perf_counter() - t0
+    preds = bp.predict_batch(sub)
+    rel = [abs(p.cycles - s) / s
+           for p, s in zip(preds, sim_cycles) if s > 0]
+    mean_rel = sum(rel) / max(len(rel), 1)
+    print(f"  simulate-backed check: {len(sub)} blocks measured in "
+          f"{sim_s * 1e3:.0f} ms (batched), mean |pred-sim|/sim = "
+          f"{100 * mean_rel:.1f}%")
+    emit("service_simulate_backed", sim_s * 1e6 / len(sub),
+         f"mean_rel_err={mean_rel:.3f}")
+    SERVICE_STATS["simulate_backed"] = {
+        "blocks": len(sub), "seconds": round(sim_s, 4),
+        "mean_rel_error_vs_prediction": round(mean_rel, 4)}
+
     tmpdir.cleanup()
     best = max(r["warm_speedup_vs_single"] for r in service_rows)
     ok = best >= 50
@@ -544,25 +653,48 @@ def table_roofline():
     emit("table_roofline", us, f"cells={len(rows)}")
 
 
-def main() -> None:
+BENCHES = {
+    "table1_characterization": table1_characterization,
+    "table_legacy_versions": table_legacy_versions,
+    "table_throughput_defs": table_throughput_defs,
+    "fig_case_aesdec": fig_case_aesdec,
+    "fig_case_shld": fig_case_shld,
+    "fig_case_movq2dq": fig_case_movq2dq,
+    "table_multi_latency": table_multi_latency,
+    "table_zero_idioms": table_zero_idioms,
+    "bench_lp": bench_lp,
+    "bench_simulator": bench_simulator,
+    "bench_batch_sim": bench_batch_sim,
+    "bench_campaign_cache": bench_campaign_cache,
+    "bench_service_throughput": bench_service_throughput,
+    "bench_hardware_corpus": bench_hardware_corpus,
+    "bench_kernel_contention": bench_kernel_contention,
+    "table_roofline": table_roofline,
+}
+
+
+def main(argv=None) -> None:
+    import argparse
     import json
 
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", action="append", choices=sorted(BENCHES),
+                    help="run only the named benchmark(s); repeatable")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny wave for bench_batch_sim (CI smoke; other "
+                         "benchmarks run at full cost — combine with "
+                         "--only bench_batch_sim) and results go to "
+                         "benchmarks.smoke.json")
+    args = ap.parse_args(argv)
+    selected = args.only or list(BENCHES)
+
     print("name,us_per_call,derived")
-    table1_characterization()
-    table_legacy_versions()
-    table_throughput_defs()
-    fig_case_aesdec()
-    fig_case_shld()
-    fig_case_movq2dq()
-    table_multi_latency()
-    table_zero_idioms()
-    bench_lp()
-    bench_simulator()
-    bench_campaign_cache()
-    bench_service_throughput()
-    bench_hardware_corpus()
-    bench_kernel_contention()
-    table_roofline()
+    for name in selected:
+        fn = BENCHES[name]
+        if name == "bench_batch_sim":
+            fn(smoke=args.smoke)
+        else:
+            fn()
     print(f"\n{len(ROWS)} benchmark rows emitted.")
 
     out = Path(__file__).resolve().parents[1] / "experiments"
@@ -572,10 +704,15 @@ def main() -> None:
                  for n, us, d in ROWS],
         "campaign_cache": CAMPAIGN_STATS,
         "service": SERVICE_STATS,
+        "batch_sim": BATCH_SIM_STATS,
     }
-    (out / "benchmarks.json").write_text(json.dumps(payload, indent=1))
-    print(f"JSON results (incl. cache hit-rate / speedup) -> "
-          f"{out / 'benchmarks.json'}")
+    if args.only or args.smoke:
+        # partial/smoke runs must not clobber the full record
+        path = out / "benchmarks.smoke.json"
+    else:
+        path = out / "benchmarks.json"
+    path.write_text(json.dumps(payload, indent=1))
+    print(f"JSON results (incl. cache hit-rate / speedup) -> {path}")
 
 
 if __name__ == "__main__":

@@ -17,8 +17,16 @@ overhead. This module reifies that protocol as data instead of control flow:
   inference algorithms that independently generate the same microbenchmark
   (e.g. μop counting in ``characterize`` and in Algorithm 1's setup) share
   one execution. ``submit`` takes a whole wave of independent Experiments,
-  dedups identical requests, and executes only the unique misses —
-  Algorithm 2's outer loop, batched.
+  dedups identical requests, and hands the unique miss-set to the machine
+  *as one wave* through the ``run_batch`` protocol (see ``machine.py``):
+  machines with a compiled batched backend (``batch_sim.BatchSimMachine``,
+  the default behind ``SimMachine.run_batch``) execute the whole wave as a
+  single vectorized array program; machines without one fall back to a
+  per-experiment scalar loop. Either way the results are bit-identical —
+  the batch backend is differential-tested against the scalar oracle.
+  The in-memory cache is LRU-bounded (``max_entries``, eviction count in
+  ``stats``) so long service-backed campaigns cannot grow without limit;
+  persisted caches are unaffected.
 
 * :class:`Campaign` — a full characterization run over *several* machines
   (microarchitectures) at once: the paper's per-uarch tool invocations,
@@ -45,6 +53,11 @@ from repro.core.simulator import Counters, Instr
 # cancels the constant measurement-harness overhead.
 N_SMALL = 10
 N_LARGE = 110
+
+# in-memory cache bound (entries). Characterization campaigns stay far
+# below this; it exists so service-backed engines fed unbounded query
+# streams cannot grow without limit.
+DEFAULT_CACHE_ENTRIES = 1 << 18
 
 
 # ---------------------------------------------------------------------------
@@ -122,8 +135,9 @@ class EngineStats:
     cache_hits: int = 0    # served from a previously executed result
     dedup_hits: int = 0    # duplicates within a single submitted wave
     executions: int = 0    # unique Experiments actually executed
-    machine_runs: int = 0  # raw machine.run passes (2 per execution)
+    machine_runs: int = 0  # raw machine runs (2 per execution)
     batches: int = 0
+    evictions: int = 0     # cache entries dropped by the LRU bound
 
     @property
     def hit_rate(self) -> float:
@@ -133,17 +147,32 @@ class EngineStats:
         return {"requests": self.requests, "cache_hits": self.cache_hits,
                 "dedup_hits": self.dedup_hits, "executions": self.executions,
                 "machine_runs": self.machine_runs, "batches": self.batches,
+                "evictions": self.evictions,
                 "hit_rate": round(self.hit_rate, 4)}
 
 
+def machine_run_batch(machine, codes) -> list[Counters]:
+    """The wave-execution protocol: machines exposing ``run_batch`` get the
+    whole wave at once (vectorized backends); plain machines fall back to
+    a per-sequence scalar loop. Re-exported by ``machine.py``."""
+    run_batch = getattr(machine, "run_batch", None)
+    if run_batch is not None:
+        return run_batch(codes)
+    return [machine.run(list(c)) for c in codes]
+
+
 class MeasurementEngine:
-    """Cached, deduplicating executor of Experiments on one machine."""
+    """Cached, deduplicating, wave-batching executor of Experiments on one
+    machine. ``max_entries`` bounds the in-memory cache (LRU); ``None``
+    disables the bound."""
 
     def __init__(self, machine, cache: dict | None = None, *,
-                 enabled: bool = True):
+                 enabled: bool = True,
+                 max_entries: int | None = DEFAULT_CACHE_ENTRIES):
         self.machine = machine
         self.cache: dict[str, Counters] = {} if cache is None else cache
         self.enabled = enabled
+        self.max_entries = max_entries
         self.stats = EngineStats()
         self._lock = threading.Lock()
 
@@ -154,8 +183,9 @@ class MeasurementEngine:
     # -- batched wave ------------------------------------------------------
     def submit(self, experiments) -> list[Counters]:
         """Execute a wave of independent Experiments; identical requests are
-        deduplicated and cached results reused. Returns one Counters per
-        submitted Experiment, in submission order."""
+        deduplicated and cached results reused; the unique miss-set runs as
+        one batch through the machine's ``run_batch`` protocol. Returns one
+        Counters per submitted Experiment, in submission order."""
         experiments = list(experiments)
         uarch = self.machine.name
         keys = [e.cache_key(uarch) for e in experiments]
@@ -163,30 +193,48 @@ class MeasurementEngine:
             self.stats.requests += len(experiments)
             self.stats.batches += 1
             if not self.enabled:
-                out = [self._execute(e) for e in experiments]
-                return out
+                return self._execute_wave(experiments)
             todo: dict[str, Experiment] = {}
+            resolved: dict[str, Counters] = {}
             for e, k in zip(experiments, keys):
                 if k in self.cache:
                     self.stats.cache_hits += 1
+                    resolved[k] = self.cache[k] = self.cache.pop(k)  # touch
                 elif k in todo:
                     self.stats.dedup_hits += 1
                 else:
                     todo[k] = e
-            for k, e in todo.items():
-                self.cache[k] = self._execute(e)
-            return [self._copy(self.cache[k]) for k in keys]
+            if todo:
+                for k, c in zip(todo, self._execute_wave(todo.values())):
+                    resolved[k] = c
+                    self._store(k, c)
+            return [self._copy(resolved[k]) for k in keys]
 
-    # -- Algorithm 2: overhead-cancelling differenced run ------------------
-    def _execute(self, exp: Experiment) -> Counters:
-        c1 = self.machine.run(list(exp.code) * exp.n_small)
-        c2 = self.machine.run(list(exp.code) * exp.n_large)
-        self.stats.machine_runs += 2
-        self.stats.executions += 1
-        d = exp.n_large - exp.n_small
-        ports = {p: (c2.port_uops.get(p, 0) - c1.port_uops.get(p, 0)) / d
-                 for p in set(c1.port_uops) | set(c2.port_uops)}
-        return Counters((c2.cycles - c1.cycles) / d, ports)
+    def _store(self, key: str, c: Counters) -> None:
+        self.cache[key] = c
+        if self.max_entries is not None:
+            while len(self.cache) > self.max_entries:
+                self.cache.pop(next(iter(self.cache)))  # oldest entry
+                self.stats.evictions += 1
+
+    # -- Algorithm 2: overhead-cancelling differenced runs, one wave -------
+    def _execute_wave(self, experiments) -> list[Counters]:
+        experiments = list(experiments)
+        codes: list = []
+        for e in experiments:
+            codes.append(list(e.code) * e.n_small)
+            codes.append(list(e.code) * e.n_large)
+        raw = machine_run_batch(self.machine, codes)
+        self.stats.machine_runs += len(codes)
+        self.stats.executions += len(experiments)
+        out = []
+        for i, e in enumerate(experiments):
+            c1, c2 = raw[2 * i], raw[2 * i + 1]
+            d = e.n_large - e.n_small
+            ports = {p: (c2.port_uops.get(p, 0) - c1.port_uops.get(p, 0)) / d
+                     for p in set(c1.port_uops) | set(c2.port_uops)}
+            out.append(Counters((c2.cycles - c1.cycles) / d, ports))
+        return out
 
     @staticmethod
     def _copy(c: Counters) -> Counters:
@@ -290,8 +338,22 @@ class Campaign:
 
     def run(self, machines, isa) -> CampaignResult:
         """Top-level entry point: one characterization per machine, sharded
-        across a thread pool (the machines are independent black boxes)."""
+        across a thread pool (the machines are independent black boxes).
+
+        Machines that support it share one compiled μop-table index, so
+        every uarch's batched backend uses the same instruction numbering
+        (one table set per campaign, not per machine)."""
         machines = list(machines)
+        try:
+            from repro.core.uarch_compile import UopTableIndex  # noqa: PLC0415
+            index = UopTableIndex.for_isa(isa)
+        except ImportError:   # no numpy: machines fall back to scalar runs
+            index = None
+        if index is not None:
+            for m in machines:
+                setter = getattr(m, "set_table_index", None)
+                if setter is not None:
+                    setter(index)
         res = CampaignResult()
         t0 = time.perf_counter()
         workers = self.max_workers or max(1, len(machines))

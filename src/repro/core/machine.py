@@ -10,13 +10,22 @@ overhead on the hardware backend), so this differencing is doing real work.
 independence properties the paper's generators need: distinct registers per
 operand, round-robin pools so repeated instances don't chain, and explicit
 "avoid" sets so benchmark code never collides with the chain registers.
+
+``run_batch`` is the wave-execution protocol between the measurement layer
+and the machines: a machine may expose ``run_batch(codes) ->
+list[Counters]`` to execute a whole wave of instruction sequences at once
+(the compiled array backend in ``core/batch_sim.py`` — the default path
+behind ``SimMachine``), and machines without it are driven by a scalar
+per-sequence loop. ``MeasurementEngine.submit`` routes every deduplicated
+miss-set through this protocol.
 """
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
 
-from repro.core.engine import N_LARGE, N_SMALL, Experiment, as_engine
+from repro.core.engine import (N_LARGE, N_SMALL, Experiment, as_engine,
+                               machine_run_batch as run_batch)
 from repro.core.isa import FLAGS, GPR, IMM, MEM, VEC, InstrSpec
 from repro.core.simulator import Counters, Instr
 

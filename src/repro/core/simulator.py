@@ -23,6 +23,14 @@ The run includes a fixed measurement-harness overhead (serializing
 instructions + counter reads, Algorithm 2), which the measurement protocol
 in ``machine.py`` must cancel via the n=10/110 differencing — faithfully
 reproducing why the paper needs that protocol at all.
+
+``SimMachine`` is the *scalar reference oracle*: ``run`` interprets one μop
+per Python iteration and is the semantics every backend must match.  The
+hot path, however, is ``run_batch`` — the measurement engine submits whole
+waves of experiments, and ``run_batch`` forwards them to the compiled
+:class:`~repro.core.batch_sim.BatchSimMachine`, which executes the wave as
+one vectorized array program, bit-identical to this oracle (differential
+tests in ``tests/test_batch_sim.py``).
 """
 from __future__ import annotations
 
@@ -75,6 +83,40 @@ class SimMachine:
         self.isa = isa
         self.name = uarch.name
         self.ports = uarch.ports
+        self._batch = None        # lazy BatchSimMachine (False: unavailable)
+        self._table_index = None  # shared UopTableIndex (set by Campaign)
+
+    # ------------------------------------------------------------------
+    def set_table_index(self, index) -> None:
+        """Adopt a campaign-wide :class:`~repro.core.uarch_compile
+        .UopTableIndex` so compiled tables share instruction numbering
+        across the campaign's machines."""
+        self._table_index = index
+        self._batch = None
+
+    def run_batch(self, codes) -> list:
+        """Execute a wave of sequences through the compiled batched
+        backend (bit-identical to per-sequence :meth:`run`); falls back
+        to the scalar loop when the array backend is unavailable.
+
+        Degenerate waves (fewer than 4 sequences) run the scalar loop
+        directly: the array program's fixed per-step cost exceeds the
+        interpreter loop it replaces (bit-identical either way); the
+        batched backend additionally routes thin padded chunks to the
+        scalar oracle (see ``BatchSimMachine.min_lanes``)."""
+        codes = list(codes)
+        if len(codes) < 4:
+            return [self.run(list(c)) for c in codes]
+        if self._batch is None:
+            try:
+                from repro.core.batch_sim import BatchSimMachine  # noqa: PLC0415
+                self._batch = BatchSimMachine(
+                    self.uarch, self.isa, table_index=self._table_index)
+            except ImportError:   # no numpy: scalar fallback
+                self._batch = False
+        if self._batch:
+            return self._batch.run_batch(codes)
+        return [self.run(list(c)) for c in codes]
 
     # ------------------------------------------------------------------
     def run(self, code: list[Instr]) -> Counters:
@@ -196,7 +238,10 @@ class SimMachine:
                     best_port, best_t = p, t
             if best_port is None:  # 0-port uop (shouldn't happen)
                 continue
-            port_free[best_port] = best_t + (occ if u.occupancy > 1 else 1)
+            # a μop occupies its port for its *effective* occupancy —
+            # including the value-dependent divider extra, so a high-value
+            # divide blocks the divider even on a 1-occupancy μop
+            port_free[best_port] = best_t + (occ if occ > 1 else 1)
             port_count[best_port] += 1
             done = best_t + lat
             done_max = max(done_max, done)

@@ -31,12 +31,20 @@ from repro.core.predictor import (Prediction, UnknownInstructionError,
 
 
 class BatchPredictor:
-    """Precompiled predictor for one :class:`PerfModel`."""
+    """Precompiled predictor for one :class:`PerfModel`.
 
-    def __init__(self, model: PerfModel, isa: ISA, issue_width: int = 4):
+    With a ``machine`` attached (a simulated core or its measurement
+    engine), the predictor also offers a *simulate-backed* mode:
+    :meth:`simulate_batch` measures whole block waves on the machine —
+    batched through its ``run_batch`` backend — giving the ground truth
+    the analytic bounds can be judged against at workload scale."""
+
+    def __init__(self, model: PerfModel, isa: ISA, issue_width: int = 4,
+                 machine=None):
         self.model = model
         self.isa = isa
         self.issue_width = issue_width
+        self.machine = machine
         # distinct port combinations across the model, in a fixed order
         combos: list[frozenset] = []
         index: dict[frozenset, int] = {}
@@ -62,6 +70,20 @@ class BatchPredictor:
     # ------------------------------------------------------------------
     def predict(self, code) -> Prediction:
         return self.predict_batch([code])[0]
+
+    def simulate_batch(self, blocks) -> list[float]:
+        """Measured steady-state cycles per block iteration, for a whole
+        wave of blocks at once (Algorithm-2 differencing on the attached
+        machine; the engine dedups the wave and executes the miss-set
+        through the machine's batched backend)."""
+        if self.machine is None:
+            raise ValueError("simulate-backed mode needs a machine "
+                             "(BatchPredictor(..., machine=...))")
+        from repro.core.engine import Experiment, as_engine  # noqa: PLC0415
+
+        engine = as_engine(self.machine)
+        res = engine.submit([Experiment.of(b) for b in blocks])
+        return [c.cycles for c in res]
 
     def predict_batch(self, blocks, on_error: str = "raise") -> list:
         """Predictions for many blocks in one pass.

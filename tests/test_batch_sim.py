@@ -1,0 +1,317 @@
+"""Batched measurement substrate: the vectorized backend must be
+bit-identical (cycles AND per-port μop counts) to the scalar oracle
+``SimMachine.run`` on every uarch, every wave shape, and random hidden
+ground truths — plus the compiled-table and divider-occupancy seams."""
+import random
+
+import pytest
+
+from repro.core.batch_sim import BatchSimMachine, _body_period
+from repro.core.engine import Campaign, as_engine
+from repro.core.isa import TEST_ISA
+from repro.core.machine import RegPool, independent_seq
+from repro.core.simulator import Instr, SimMachine
+from repro.core.uarch import (SIM_SKL, SIM_UARCHES, UArch, beh, make_tpu_sim,
+                              random_uarch_and_isa, uop)
+from repro.core.uarch_compile import UopTableIndex, compile_uarch
+
+try:
+    import hypothesis  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def assert_wave_matches(ua, isa, codes, backend="numpy"):
+    scalar = SimMachine(ua, isa)
+    # min_lanes=1: force every chunk through the array kernel (the default
+    # routes thin chunks to the scalar oracle, which would test nothing)
+    batch = BatchSimMachine(ua, isa, backend=backend, min_lanes=1)
+    got = batch.run_batch(codes)
+    assert len(got) == len(codes)
+    for i, code in enumerate(codes):
+        ref = scalar.run(list(code))
+        assert got[i].cycles == ref.cycles, (i, code[:4])
+        assert got[i].port_uops == ref.port_uops, (i, code[:4])
+
+
+def _interesting_wave(isa):
+    """Sequences exercising every special path: zero idioms (both kinds),
+    move elimination, same-register variants, dividers (both value
+    classes), loads/stores + forwarding, partial-register stalls, flags
+    chains, NOP-likes — unrolled the way Algorithm 2 unrolls them."""
+    codes = []
+    for spec in ("ADD_R64_R64", "MOV_R64_R64", "XOR_R64_R64", "DIV_R64",
+                 "SHLD_R64_R64_I8", "MOV_M64_R64", "AESDEC_X_X",
+                 "MOVQ2DQ_X_X", "ADC_R64_R64", "MUL_R64", "PCMPGTQ_X_X",
+                 "PAUSE", "ADD_R64_M64"):
+        body = independent_seq(isa[spec], RegPool(), 3)
+        codes.append(body * 10)
+        codes.append(body * 110)
+    codes += [
+        [Instr("SHLD_R64_R64_I8", {"op1": "R0", "op2": "R0"})] * 30,
+        [Instr("DIV_R64", {"op1": "R0", "op2": "R1"}, "high")] * 15,
+        [Instr("XOR_R64_R64", {"op1": "R3", "op2": "R3"}),
+         Instr("IMUL_R64_R64", {"op1": "R3", "op2": "R4"})] * 40,
+        [Instr("MOV_R64_R64", {"op1": f"R{(i + 1) % 8}", "op2": f"R{i % 8}"})
+         for i in range(8)] * 9,
+        [Instr("SETC_R8", {"op1": "R1"}),
+         Instr("ADD_R64_R64", {"op1": "R2", "op2": "R1"}),
+         Instr("TEST_R64_R64", {"op1": "R2", "op2": "R2"})] * 35,
+        [Instr("MOV_M64_R64", {"mem": "RB0", "op1": "R1"}),
+         Instr("MOV_R64_M64", {"op1": "R1", "mem": "RB0"})] * 20,
+    ]
+    return codes
+
+
+@pytest.mark.parametrize("uarch", sorted(SIM_UARCHES))
+def test_batch_identical_to_scalar_on_sim_uarches(uarch):
+    ua = SIM_UARCHES[uarch]
+    assert_wave_matches(ua, TEST_ISA, _interesting_wave(TEST_ISA))
+
+
+def test_batch_identical_on_tpu_unit_model():
+    ua, isa, truth = make_tpu_sim()
+    names = list(truth)
+    codes = [[Instr(names[(i + j) % len(names)],
+                    {"op1": f"R{j % 4}", "op2": f"R{(j + 1) % 4}"})
+              for j in range(4)] * reps for i, reps in
+             enumerate((1, 10, 30, 110))]
+    assert_wave_matches(ua, isa, codes)
+
+
+def _random_wave(ua_seed, wave_seed, n_codes=8):
+    ua, isa, truth = random_uarch_and_isa(ua_seed)
+    rng = random.Random(wave_seed)
+    names = list(truth)
+    codes = []
+    for _ in range(n_codes):
+        body = [Instr(rng.choice(names),
+                      {"op1": f"R{rng.randint(0, 5)}",
+                       "op2": f"R{rng.randint(0, 5)}"})
+                for _ in range(rng.randint(1, 5))]
+        codes.append(body * rng.choice([1, 3, 10, 37, 110]))
+    return ua, isa, codes
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_batch_identical_on_random_ground_truths(seed):
+    """Seeded fallback for the hypothesis property below — always runs."""
+    ua, isa, codes = _random_wave(seed, seed + 100)
+    assert_wave_matches(ua, isa, codes)
+
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @given(ua_seed=st.integers(0, 500), wave_seed=st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_batch_identical_property(ua_seed, wave_seed):
+        """For ANY hidden ground truth and ANY wave, the array program and
+        the scalar interpreter agree bit-for-bit."""
+        ua, isa, codes = _random_wave(ua_seed, wave_seed, n_codes=4)
+        assert_wave_matches(ua, isa, codes)
+
+
+# ---------------------------------------------------------------------------
+# wave-shape edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_empty_wave():
+    assert BatchSimMachine(SIM_SKL, TEST_ISA).run_batch([]) == []
+
+
+def test_empty_and_single_instruction_sequences():
+    codes = [[],                                              # empty code
+             [Instr("ADD_R64_R64", {"op1": "R0", "op2": "R1"})],  # single
+             [Instr("NOP", {})] * 50]                         # 0-μop body
+    assert_wave_matches(SIM_SKL, TEST_ISA, codes)
+
+
+def test_ragged_wave_lengths():
+    body = independent_seq(TEST_ISA["IMUL_R64_R64"], RegPool(), 4)
+    codes = [body * 1, body * 37, [], body * 110,
+             [Instr("ADD_R64_R64", {"op1": "R0", "op2": "R1"})], body * 10]
+    assert_wave_matches(SIM_SKL, TEST_ISA, codes)
+
+
+def test_jax_backend_matches_when_available():
+    pytest.importorskip("jax")
+    body = independent_seq(TEST_ISA["ADD_R64_R64"], RegPool(), 3)
+    codes = [body * 4, body * 11,
+             [Instr("DIV_R64", {"op1": "R0", "op2": "R1"}, "high")] * 6,
+             []]
+    assert_wave_matches(SIM_SKL, TEST_ISA, codes, backend="jax")
+
+
+def test_unknown_instruction_raises_keyerror_like_scalar():
+    b = BatchSimMachine(SIM_SKL, TEST_ISA)
+    with pytest.raises(KeyError):
+        b.run_batch([[Instr("NO_SUCH_INSTR", {})] * 4])
+
+
+def test_wide_port_machine_counts_exact():
+    """A uarch with more than 16 ports: the kernel's packed dispatch key
+    must keep port counts and tie-breaks exact (regression: the port
+    axis once shared bit space with the μop counts)."""
+    from repro.core.isa import GPR, ISA, InstrSpec, op
+    ports = tuple(f"p{i:02d}" for i in range(18))
+    b = {"WADD": beh(uop(frozenset(ports), ("op2",), ("op1",)))}
+    ua = UArch("sim_wide", ports, 8, b, overhead_cycles=0)
+    isa = ISA([InstrSpec("WADD", "WADD",
+                         (op("op1", GPR, "w"), op("op2", GPR, "r")))])
+    codes = [[Instr("WADD", {"op1": f"R{i}", "op2": f"R{i + 20}"})
+              for i in range(20)] * reps for reps in (1, 5, 11)]
+    assert_wave_matches(ua, isa, codes)
+
+
+def test_body_period_detection():
+    a = [Instr("ADD_R64_R64", {"op1": "R0", "op2": "R1"}) for _ in range(3)]
+    assert _body_period([id(x) for x in a * 40]) == 3
+    assert _body_period([id(x) for x in a]) == 3  # distinct objects
+    assert _body_period([id(a[0])] * 7) == 1
+
+
+# ---------------------------------------------------------------------------
+# machine-level protocol: SimMachine routes waves to the batched backend
+# ---------------------------------------------------------------------------
+
+
+def test_simmachine_run_batch_matches_scalar_loop():
+    m = SimMachine(SIM_SKL, TEST_ISA)
+    codes = _interesting_wave(TEST_ISA)[:10]
+    got = m.run_batch(codes)
+    for c, code in zip(got, codes):
+        ref = m.run(list(code))
+        assert c.cycles == ref.cycles and c.port_uops == ref.port_uops
+
+
+# ---------------------------------------------------------------------------
+# satellite: divider-occupancy gate (occ includes the value-dependent extra)
+# ---------------------------------------------------------------------------
+
+
+def _slow_div_uarch():
+    """A divider-like μop with *occupancy 1* whose value-dependent extra
+    must still block the port: the old ``u.occupancy > 1`` gate dropped
+    the blocking entirely for this shape."""
+    b = {"SDIV_R64_R64": beh(
+        uop(frozenset("0"), ("op2",), ("op1",), lat=5, occ=1),
+        divider_extra=10),
+        "LEA_R64": beh(uop(frozenset("1"), ("op2",), ("op1",)))}
+    return UArch("sim_slowdiv", tuple("01"), 4, b, overhead_cycles=0)
+
+
+def _sdiv_isa():
+    from repro.core.isa import GPR, ISA, InstrSpec, op
+    isa = ISA()
+    isa.add(InstrSpec("SDIV_R64_R64", "SDIV",
+                      (op("op1", GPR, "w"), op("op2", GPR, "r")),
+                      uses_divider=True))
+    isa.add(InstrSpec("LEA_R64", "LEA",
+                      (op("op1", GPR, "w"), op("op2", GPR, "r"))))
+    return isa
+
+
+def test_high_value_divide_occupies_port_on_single_occupancy_uop():
+    ua, isa = _slow_div_uarch(), _sdiv_isa()
+    m = SimMachine(ua, isa)
+    # two independent high-value divides on the same port: the second must
+    # wait out the first's effective occupancy (1 + 10), then lat 5 + 10
+    hi = [Instr("SDIV_R64_R64", {"op1": "R0", "op2": "R1"}, "high"),
+          Instr("SDIV_R64_R64", {"op1": "R2", "op2": "R3"}, "high")]
+    assert m.run(hi).cycles == 11 + 15
+    # low values: fully pipelined, second dispatches one cycle later
+    lo = [Instr("SDIV_R64_R64", {"op1": "R0", "op2": "R1"}),
+          Instr("SDIV_R64_R64", {"op1": "R2", "op2": "R3"})]
+    assert m.run(lo).cycles == 1 + 5
+    # and the batched backend agrees on the whole regression wave
+    assert_wave_matches(ua, isa, [hi * 12, lo * 12, hi * 110])
+
+
+# ---------------------------------------------------------------------------
+# compiled tables: round-trip + campaign-wide sharing
+# ---------------------------------------------------------------------------
+
+
+def test_compiled_tables_round_trip_behaviors():
+    comp = compile_uarch(SIM_SKL, TEST_ISA)
+    index = comp.index
+    assert comp.ports == tuple(sorted(SIM_SKL.ports))
+    for name, behavior in SIM_SKL.behaviors.items():
+        i = index.idx[name]
+        off, cnt = comp.behavior_rows(i, same_reg=False)
+        assert cnt == len(behavior.uops)
+        for j, u in enumerate(behavior.uops):
+            row = off + j
+            mask = {p for b, p in enumerate(comp.ports)
+                    if comp.port_mask[row] >> b & 1}
+            assert mask == set(u.ports)
+            assert comp.latency[row] == u.latency
+            assert comp.occupancy[row] == u.occupancy
+            reads = [comp.decode_slot(i, s) for s in comp.reads[row]
+                     if s >= 0]
+            writes = [comp.decode_slot(i, s) for s in comp.writes[row]
+                      if s >= 0]
+            assert tuple(reads) == u.reads
+            assert tuple(writes) == u.writes
+        assert comp.elim_period[i] == behavior.elim_period
+        assert comp.divider_extra[i] == behavior.divider_extra
+        if behavior.same_reg is not None:
+            sr_off, sr_cnt = comp.behavior_rows(i, same_reg=True)
+            assert sr_cnt == len(behavior.same_reg.uops)
+
+
+def test_campaign_shares_one_table_index_across_uarches():
+    machines = [SimMachine(ua, TEST_ISA) for ua in SIM_UARCHES.values()]
+    Campaign(instr_names=["ADD_R64_R64"]).run(machines, TEST_ISA)
+    indexes = {id(m._table_index) for m in machines}
+    assert len(indexes) == 1 and None not in {m._table_index
+                                              for m in machines}
+    # the shared index drives each machine's compiled tables
+    comps = [compile_uarch(m.uarch, TEST_ISA, m._table_index)
+             for m in machines]
+    assert all(c.index is comps[0].index for c in comps)
+    assert all(c.index.names == comps[0].index.names for c in comps)
+
+
+def test_engine_submits_waves_through_run_batch():
+    """The measurement engine's miss-set reaches the machine as ONE wave
+    (not a per-experiment loop) when the machine speaks the protocol."""
+    from repro.core.engine import Experiment, MeasurementEngine
+
+    class WaveRecorder:
+        name = "sim_skl"
+        counters_available = True
+
+        def __init__(self):
+            self._m = SimMachine(SIM_SKL, TEST_ISA)
+            self.waves = []
+
+        def run_batch(self, codes):
+            self.waves.append(len(codes))
+            return self._m.run_batch(codes)
+
+    rec = WaveRecorder()
+    eng = MeasurementEngine(rec)
+    exps = [Experiment.of(independent_seq(TEST_ISA[n], RegPool(), 3))
+            for n in ("ADD_R64_R64", "IMUL_R64_R64", "LEA_R64")]
+    eng.submit(exps + exps)   # duplicates dedup away
+    assert rec.waves == [6]   # 3 unique experiments x (n_small, n_large)
+
+
+def test_legacy_measure_results_unchanged_by_batch_default():
+    """measure() through the engine equals a hand-rolled scalar
+    Algorithm-2 differencing."""
+    from repro.core.machine import measure
+
+    seq = independent_seq(TEST_ISA["ADC_R64_R64"], RegPool(), 4)
+    m = SimMachine(SIM_SKL, TEST_ISA)
+    got = measure(m, seq)
+    s = SimMachine(SIM_SKL, TEST_ISA)
+    c1, c2 = s.run(seq * 10), s.run(seq * 110)
+    assert got.cycles == (c2.cycles - c1.cycles) / 100
+    assert as_engine(m).stats.executions == 1

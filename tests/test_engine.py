@@ -217,3 +217,47 @@ def test_campaign_shards_across_uarches(tmp_path):
         [_machine(n) for n in ("sim_skl", "sim_snb")], TEST_ISA)
     assert res2.hit_rate == 1.0
     assert all(s["executions"] == 0 for s in res2.stats.values())
+
+
+# ---------------------------------------------------------------------------
+# LRU bound on the in-memory cache
+# ---------------------------------------------------------------------------
+
+
+def _exps(*names):
+    return [Experiment.of(independent_seq(TEST_ISA[n], RegPool(), 3))
+            for n in names]
+
+
+def test_cache_bound_evicts_oldest_and_counts_evictions():
+    engine = MeasurementEngine(_machine(), max_entries=2)
+    ea, eb, ec = _exps("ADD_R64_R64", "IMUL_R64_R64", "LEA_R64")
+    engine.submit([ea, eb, ec])
+    assert len(engine.cache) == 2
+    assert engine.stats.evictions == 1
+    assert engine.stats.as_dict()["evictions"] == 1
+    # the evicted (oldest) experiment re-executes; the retained ones hit
+    engine.submit([ea])
+    assert engine.stats.executions == 4
+    engine.submit([ec])
+    assert engine.stats.cache_hits == 1
+
+
+def test_cache_bound_is_lru_not_fifo():
+    engine = MeasurementEngine(_machine(), max_entries=2)
+    ea, eb, ec = _exps("ADD_R64_R64", "IMUL_R64_R64", "LEA_R64")
+    engine.submit([ea, eb])
+    engine.submit([ea])       # touch: ea becomes most-recent
+    engine.submit([ec])       # evicts eb, not ea
+    hits0 = engine.stats.cache_hits
+    engine.submit([ea])
+    assert engine.stats.cache_hits == hits0 + 1
+    assert engine.stats.executions == 3
+
+
+def test_unbounded_cache_never_evicts():
+    engine = MeasurementEngine(_machine(), max_entries=None)
+    engine.submit(_exps("ADD_R64_R64", "IMUL_R64_R64", "LEA_R64",
+                        "MUL_R64", "CMC"))
+    assert engine.stats.evictions == 0
+    assert len(engine.cache) == 5
