@@ -18,6 +18,11 @@ a human-readable table per benchmark. Paper mapping:
   bench_simulator           measurement-machine μop throughput
   bench_batch_sim           vectorized measurement substrate: scalar loop
                             vs NumPy vs jax batched backend, wave sweep
+  bench_characterize        cold scheduler-fused characterize: wall-clock
+                            + fused-wave-width telemetry (CI smoke records
+                            this into benchmarks.smoke.json)
+  bench_wave_fusion         per-instruction (legacy) vs scheduler-fused
+                            characterization across SIM_UARCHES
   bench_hardware_corpus     §6.2-analogue — real-JAX op corpus wall-clock
   bench_kernel_contention   blocking-kernel unit attribution harness
   table_roofline            §Roofline — dry-run roofline summary (if runs
@@ -448,6 +453,114 @@ def bench_batch_sim(smoke: bool = False):
                             "jax_available": have_jax})
 
 
+CHARACTERIZE_STATS: dict = {}
+
+# representative subset for the CI smoke artifact: big enough that wave
+# fusion is visible, small enough to stay in CI budget
+SMOKE_SUBSET = ["ADD_R64_R64", "ADC_R64_R64", "MOVQ2DQ_X_X", "MUL_R64",
+                "SHLD_R64_R64_I8", "MOV_M64_R64", "DIV_R64", "AESDEC_X_X",
+                "IMUL_R64_M64", "CMC", "PADDD_X_X", "PSHUFD_X_X"]
+
+
+def bench_characterize(smoke: bool = False):
+    """Cold scheduler-fused characterization: wall-clock and wave-width
+    telemetry. The smoke variant (CI) characterizes a fixed instruction
+    subset and records cold wall-clock + mean fused-wave width into
+    experiments/benchmarks.smoke.json, so wave-fusion regressions show up
+    in the artifact diff; the full variant runs the whole μISA."""
+    import time as _time
+
+    from repro.core.characterize import characterize
+    from repro.core.engine import MeasurementEngine
+    from repro.core.isa import TEST_ISA
+    from repro.core.simulator import SimMachine
+    from repro.core.uarch import SIM_SKL
+
+    names = SMOKE_SUBSET if smoke else None
+    m = SimMachine(SIM_SKL, TEST_ISA)
+    t0 = _time.perf_counter()
+    model = characterize(MeasurementEngine(m), TEST_ISA, names)
+    cold_s = _time.perf_counter() - t0
+    ws = model.wave_stats
+    print(f"\n== cold characterize ({'smoke subset' if smoke else 'full'}"
+          f" μISA, scheduler-fused) ==")
+    print(f"  {len(model.instructions)} variants in {cold_s:.2f}s: "
+          f"{ws['waves']} fused waves, mean width "
+          f"{ws['mean_wave_width']:.1f}, max {ws['max_wave_width']}")
+    emit("bench_characterize_cold", cold_s * 1e6,
+         f"mean_wave_width={ws['mean_wave_width']};waves={ws['waves']}")
+    CHARACTERIZE_STATS.update({
+        "smoke": smoke, "instructions": len(model.instructions),
+        "cold_seconds": round(cold_s, 3),
+        "mean_wave_width": ws["mean_wave_width"],
+        "max_wave_width": ws["max_wave_width"], "waves": ws["waves"],
+        "experiments": ws["experiments"],
+        "engine_hit_rate": model.engine_stats["hit_rate"]})
+
+
+WAVE_FUSION_STATS: dict = {}
+
+
+def bench_wave_fusion():
+    """Measurement-plan scheduler: per-instruction (legacy sequential
+    driver) vs scheduler-fused characterization — wave widths and cold
+    wall-clock across SIM_UARCHES. Model XML asserted identical while
+    being timed, so the speedup is measured on byte-equivalent work."""
+    import time as _time
+
+    from repro.core import model_io
+    from repro.core.characterize import characterize
+    from repro.core.engine import MeasurementEngine
+    from repro.core.isa import TEST_ISA
+    from repro.core.simulator import SimMachine
+    from repro.core.uarch import SIM_UARCHES
+
+    rows = []
+    print("\n== wave fusion: per-instruction (legacy) vs scheduler-fused ==")
+    print(f"{'uarch':10s} {'seq_s':>7s} {'fused_s':>8s} {'speedup':>8s} "
+          f"{'seq_w':>6s} {'fused_w':>8s} {'width_x':>8s}")
+    for name, ua in SIM_UARCHES.items():
+        t0 = _time.perf_counter()
+        seq = characterize(MeasurementEngine(SimMachine(ua, TEST_ISA)),
+                           TEST_ISA, sequential=True)
+        t_seq = _time.perf_counter() - t0
+        t0 = _time.perf_counter()
+        fused = characterize(MeasurementEngine(SimMachine(ua, TEST_ISA)),
+                             TEST_ISA)
+        t_fus = _time.perf_counter() - t0
+        assert model_io.to_xml(fused, TEST_ISA) == \
+            model_io.to_xml(seq, TEST_ISA), \
+            f"{name}: fused characterization diverged from sequential"
+        w_seq = seq.wave_stats["mean_wave_width"]
+        w_fus = fused.wave_stats["mean_wave_width"]
+        speed, width_x = t_seq / t_fus, w_fus / w_seq
+        print(f"{name:10s} {t_seq:7.2f} {t_fus:8.2f} {speed:7.1f}x "
+              f"{w_seq:6.2f} {w_fus:8.1f} {width_x:7.1f}x")
+        emit(f"wave_fusion_{name}", t_fus * 1e6,
+             f"speedup={speed:.1f}x;width_x={width_x:.1f}x")
+        rows.append({"uarch": name, "sequential_s": round(t_seq, 3),
+                     "fused_s": round(t_fus, 3),
+                     "speedup": round(speed, 2),
+                     "sequential_mean_wave_width": w_seq,
+                     "fused_mean_wave_width": w_fus,
+                     "wave_width_ratio": round(width_x, 1),
+                     "fused_max_wave_width":
+                         fused.wave_stats["max_wave_width"]})
+    mean_speed = sum(r["speedup"] for r in rows) / len(rows)
+    mean_width = sum(r["wave_width_ratio"] for r in rows) / len(rows)
+    meets_w = all(r["wave_width_ratio"] >= 10 for r in rows)
+    meets_t = all(r["speedup"] >= 2 for r in rows)
+    print(f"  mean: {mean_speed:.1f}x wall-clock, {mean_width:.0f}x wave "
+          f"width ({'meets' if meets_w else 'MISSES'} the >=10x width "
+          f"target, {'meets' if meets_t else 'MISSES'} the >=2x cold "
+          f"wall-clock target)")
+    WAVE_FUSION_STATS.update({
+        "per_uarch": rows, "mean_speedup": round(mean_speed, 2),
+        "mean_wave_width_ratio": round(mean_width, 1),
+        "meets_10x_width_target": meets_w,
+        "meets_2x_speedup_target": meets_t})
+
+
 CAMPAIGN_STATS: dict = {}
 
 
@@ -665,6 +778,8 @@ BENCHES = {
     "bench_lp": bench_lp,
     "bench_simulator": bench_simulator,
     "bench_batch_sim": bench_batch_sim,
+    "bench_characterize": bench_characterize,
+    "bench_wave_fusion": bench_wave_fusion,
     "bench_campaign_cache": bench_campaign_cache,
     "bench_service_throughput": bench_service_throughput,
     "bench_hardware_corpus": bench_hardware_corpus,
@@ -681,9 +796,10 @@ def main(argv=None) -> None:
     ap.add_argument("--only", action="append", choices=sorted(BENCHES),
                     help="run only the named benchmark(s); repeatable")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny wave for bench_batch_sim (CI smoke; other "
-                         "benchmarks run at full cost — combine with "
-                         "--only bench_batch_sim) and results go to "
+                    help="CI smoke mode: tiny wave for bench_batch_sim and "
+                         "an instruction subset for bench_characterize "
+                         "(other benchmarks run at full cost — combine "
+                         "with --only) and results go to "
                          "benchmarks.smoke.json")
     args = ap.parse_args(argv)
     selected = args.only or list(BENCHES)
@@ -691,7 +807,7 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     for name in selected:
         fn = BENCHES[name]
-        if name == "bench_batch_sim":
+        if name in ("bench_batch_sim", "bench_characterize"):
             fn(smoke=args.smoke)
         else:
             fn()
@@ -705,6 +821,8 @@ def main(argv=None) -> None:
         "campaign_cache": CAMPAIGN_STATS,
         "service": SERVICE_STATS,
         "batch_sim": BATCH_SIM_STATS,
+        "characterize": CHARACTERIZE_STATS,
+        "wave_fusion": WAVE_FUSION_STATS,
     }
     if args.only or args.smoke:
         # partial/smoke runs must not clobber the full record

@@ -27,7 +27,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.service.client import ServiceClient, local_service  # noqa: E402
-from repro.service.protocol import parse_block  # noqa: E402
+from repro.service.protocol import format_block, parse_block  # noqa: E402
 
 REPO = Path(__file__).resolve().parents[1]
 
@@ -91,9 +91,11 @@ def main(argv=None) -> int:
     if args.as_json:
         print(json.dumps(responses, indent=1))
         return 0
+    # echo the canonical textual form (format_block is the exact inverse of
+    # parse_block, so this is re-parseable as-is)
     print(f"block ({len(code)} instructions):")
-    for ins in code:
-        print(f"  {ins!r}")
+    for line in format_block(code).splitlines():
+        print(f"  {line}")
     print()
     for ua in uarches:
         print(report(ua, responses[ua]))

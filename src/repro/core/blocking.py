@@ -14,10 +14,12 @@ units. The algorithm:
    MOV special case,
 5. SSE and AVX get separate blocking sets to avoid transition penalties.
 
-Execution goes through the measurement engine in two batched waves: one
-isolation wave over all candidates (μop count and port distribution come
-from the same experiment), then one throughput wave over the 1-μop
-survivors.
+The algorithm is expressed as a :mod:`repro.core.plan` measurement plan
+(:func:`blocking_plan`) with two waves: one isolation wave over all
+candidates (μop count and port distribution come from the same experiment;
+the store MOV's isolation run rides along), then one throughput wave over
+the 1-μop survivors. :func:`find_blocking_instructions` remains the
+run-to-completion wrapper over the plan.
 """
 from __future__ import annotations
 
@@ -26,7 +28,8 @@ from dataclasses import dataclass, field
 from repro.core.engine import as_engine
 from repro.core.isa import ISA, MEM, InstrSpec
 from repro.core.machine import (independent_experiment, ports_from_counters,
-                                total_uops, uops_from_counters)
+                                uops_from_counters)
+from repro.core.plan import MeasurementPlan, run_plan
 
 
 @dataclass
@@ -49,21 +52,22 @@ def measured_throughput(machine, spec: InstrSpec, n: int = 8) -> float:
     return engine.measure(independent_experiment(spec, n)).cycles / n
 
 
-def find_blocking_instructions(machine, isa: ISA,
-                               extensions: tuple[str, ...] = ("BASE", "SSE"),
-                               ) -> BlockingSet:
-    """Discover one blocking instruction per observed port combination.
-
-    ``extensions`` restricts candidates (separate SSE vs AVX sets, §5.1.1).
-    """
-    engine = as_engine(machine)
+def _blocking_gen(isa: ISA, extensions: tuple[str, ...]):
     cands = [spec for spec in isa
              if not _excluded(spec) and spec.extension in extensions
              and not any(o.otype == MEM and o.written for o in spec.operands)]
-    # store combos handled below (2-μop MOV special case)
+    # store combos handled below (2-μop MOV special case); its isolation
+    # experiment joins wave 1 so the special case costs no extra wave
+    store = next((s for s in isa
+                  if any(o.otype == MEM and o.written for o in s.operands)
+                  and s.mnemonic == "MOV"), None)
 
     # wave 1: isolation runs — μop count and port distribution per candidate
-    iso = engine.submit([independent_experiment(s, 12) for s in cands])
+    wave = [independent_experiment(s, 12) for s in cands]
+    if store is not None:
+        wave.append(independent_experiment(store, 12))
+    iso = yield wave
+    store_iso = iso[len(cands)] if store is not None else None
     one_uop = [(s, frozenset(ports_from_counters(c, 12)))
                for s, c in zip(cands, iso)
                if abs(uops_from_counters(c, 12) - 1.0) <= 0.1]
@@ -72,8 +76,7 @@ def find_blocking_instructions(machine, isa: ISA,
     one_uop = [(s, ports) for s, ports in one_uop if ports]
 
     # wave 2: throughput of the 1-μop survivors
-    tputs = engine.submit([independent_experiment(s, 8)
-                           for s, _ in one_uop])
+    tputs = yield [independent_experiment(s, 8) for s, _ in one_uop]
     groups: dict[frozenset, list[tuple[float, str]]] = {}
     for (spec, ports), c_tp in zip(one_uop, tputs):
         groups.setdefault(ports, []).append((c_tp.cycles / 8, spec.name))
@@ -86,12 +89,8 @@ def find_blocking_instructions(machine, isa: ISA,
 
     # store data / store address ports: use the reg->mem MOV (2 μops; one on
     # the store-data combo, one on the store-address combo).
-    store = next((s for s in isa
-                  if any(o.otype == MEM and o.written for o in s.operands)
-                  and s.mnemonic == "MOV"), None)
-    if store is not None and abs(total_uops(engine, store) - 2.0) < 0.1:
-        c = engine.measure(independent_experiment(store, 12))
-        dist = ports_from_counters(c, 12)
+    if store is not None and abs(uops_from_counters(store_iso, 12) - 2.0) < 0.1:
+        dist = ports_from_counters(store_iso, 12)
         # the store-data μop pins one port (~1 μop/instance); the
         # store-address μop spreads over its AGU ports (fractional counts)
         data_pc = frozenset(p for p in dist if dist[p] > 0.9)
@@ -101,3 +100,20 @@ def find_blocking_instructions(machine, isa: ISA,
                 bs.instrs[pc] = store.name
                 bs.uops_on_pc[pc] = 1
     return bs
+
+
+def blocking_plan(isa: ISA, extensions: tuple[str, ...] = ("BASE", "SSE")):
+    """Plan producing the :class:`BlockingSet` for ``extensions``."""
+    return MeasurementPlan(_blocking_gen(isa, extensions),
+                           name=f"blocking[{'/'.join(extensions)}]",
+                           phase="blocking")
+
+
+def find_blocking_instructions(machine, isa: ISA,
+                               extensions: tuple[str, ...] = ("BASE", "SSE"),
+                               ) -> BlockingSet:
+    """Discover one blocking instruction per observed port combination.
+
+    ``extensions`` restricts candidates (separate SSE vs AVX sets, §5.1.1).
+    Run-to-completion wrapper over :func:`blocking_plan`."""
+    return run_plan(machine, blocking_plan(isa, extensions))

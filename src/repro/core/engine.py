@@ -31,20 +31,27 @@ overhead. This module reifies that protocol as data instead of control flow:
 * :class:`Campaign` — a full characterization run over *several* machines
   (microarchitectures) at once: the paper's per-uarch tool invocations,
   sharded across a thread pool, with per-uarch engines whose caches can be
-  persisted (via ``model_io``) so re-runs are incremental.
+  persisted (via ``model_io``) so re-runs are incremental. Each worker
+  drives the composite characterization plan through one
+  :class:`~repro.core.plan.WaveScheduler`, and a shared cancellation event
+  makes the first worker failure cancel its siblings cleanly.
 
 The inference algorithms (blocking / port_usage / latency / throughput /
-characterize) build Experiments and hand them to an engine; none of them
-calls ``machine.run`` directly anymore. ``engine.stats`` counts requests,
-hits, and executions — the invariant that no duplicate simulator execution
-ever happens is testable, not aspirational.
+characterize) are expressed as *measurement plans* (see ``core/plan.py``):
+resumable coroutines that yield batches of Experiments and receive their
+Counters; none of them calls ``machine.run`` directly anymore. A
+``WaveScheduler`` drains many plans' pending yields into fused super-waves
+through ``submit``, so dedup/cache sharing happens *across* concurrently
+scheduled plans, not just within one algorithm's batch. ``engine.stats``
+counts requests, hits, and executions — the invariant that no duplicate
+simulator execution ever happens is testable, not aspirational.
 """
 from __future__ import annotations
 
 import hashlib
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import ThreadPoolExecutor, as_completed
 from dataclasses import dataclass, field
 
 from repro.core.simulator import Counters, Instr
@@ -267,8 +274,16 @@ class CampaignResult:
     stats: dict = field(default_factory=dict)          # uarch -> stats dict
     phase_seconds: dict = field(default_factory=dict)  # uarch -> phase -> s
     uarch_seconds: dict = field(default_factory=dict)  # uarch -> CPU s
+    wave_stats: dict = field(default_factory=dict)     # uarch -> wave widths
     wall_seconds: float = 0.0  # campaign wall; per-uarch values are
     # thread CPU seconds (comparable across runs regardless of sharding)
+
+    @property
+    def mean_wave_width(self) -> float:
+        """Campaign-wide mean fused-wave width (experiments per submit)."""
+        exps = sum(w.get("experiments", 0) for w in self.wave_stats.values())
+        waves = sum(w.get("waves", 0) for w in self.wave_stats.values())
+        return exps / max(1, waves)
 
     @property
     def hit_rate(self) -> float:
@@ -294,6 +309,15 @@ class CampaignResult:
 class Campaign:
     """Characterize several machines concurrently through cached engines.
 
+    Each machine's worker drives the composite characterization plan
+    through its own :class:`~repro.core.plan.WaveScheduler`, so every
+    uarch's experiments fuse into campaign-wide super-waves (wave-width
+    telemetry lands in ``CampaignResult.wave_stats``). Workers share one
+    cancellation event: the first failure cancels the sibling schedulers at
+    their next wave boundary and the original exception (with its
+    traceback) propagates from :meth:`run` instead of a hung pool or a
+    partially populated result.
+
     ``cache_dir`` enables the persistent cache: each machine's engine cache
     is loaded before and saved after its characterization (serialized by
     ``model_io``), making ``characterize`` re-runs incremental across
@@ -309,7 +333,7 @@ class Campaign:
         from pathlib import Path  # noqa: PLC0415
         return Path(self.cache_dir) / f"{uarch}.meas.json"
 
-    def _run_one(self, machine, isa):
+    def _run_one(self, machine, isa, cancel, execute_lock):
         from repro.core import model_io  # noqa: PLC0415
         from repro.core.characterize import characterize  # noqa: PLC0415
 
@@ -329,7 +353,8 @@ class Campaign:
         # thread CPU time: under the GIL the machines' threads interleave,
         # so wall clock per uarch would just re-measure the whole campaign
         t0 = time.thread_time()
-        model = characterize(engine, isa, self.instr_names)
+        model = characterize(engine, isa, self.instr_names, cancel=cancel,
+                             execute_lock=execute_lock)
         dt = time.thread_time() - t0
         if self.cache_dir is not None:
             model_io.save_measurement_cache(self._cache_path(machine.name),
@@ -357,16 +382,38 @@ class Campaign:
         res = CampaignResult()
         t0 = time.perf_counter()
         workers = self.max_workers or max(1, len(machines))
+        # per-run cancel event and wave-execution lock (a Campaign object is
+        # just config; one instance may serve concurrent run() calls). The
+        # lock serializes the workers' fused array kernels: under the GIL,
+        # concurrently interleaving them only thrashes (wave execution is
+        # the CPU-bound part; plan stepping stays concurrent)
+        cancel = threading.Event()
+        execute_lock = threading.Lock()
         with ThreadPoolExecutor(max_workers=workers) as pool:
-            futures = {m.name: pool.submit(self._run_one, m, isa)
+            futures = {pool.submit(self._run_one, m, isa, cancel,
+                                   execute_lock): m.name
                        for m in machines}
-            for name, fut in futures.items():
-                model, engine, dt = fut.result()
-                res.models[name] = model
-                # per-run delta (the engine may carry state from prior
-                # campaigns on the same machine), as recorded by characterize
-                res.stats[name] = dict(model.engine_stats)
-                res.phase_seconds[name] = dict(model.phase_seconds)
-                res.uarch_seconds[name] = dt
+            try:
+                for fut in as_completed(futures):
+                    name = futures[fut]
+                    # a worker failure re-raises here with the original
+                    # traceback attached (concurrent.futures preserves it)
+                    model, engine, dt = fut.result()
+                    res.models[name] = model
+                    # per-run delta (the engine may carry state from prior
+                    # campaigns on the same machine), as recorded by
+                    # characterize
+                    res.stats[name] = dict(model.engine_stats)
+                    res.phase_seconds[name] = dict(model.phase_seconds)
+                    res.wave_stats[name] = dict(model.wave_stats)
+                    res.uarch_seconds[name] = dt
+            except BaseException:
+                # cancel the sibling workers' schedulers at their next wave
+                # boundary, drop queued work, and surface the first failure
+                # instead of hanging or returning a partial CampaignResult
+                cancel.set()
+                for f in futures:
+                    f.cancel()
+                raise
         res.wall_seconds = time.perf_counter() - t0
         return res

@@ -22,6 +22,15 @@ independent register for flags, a zero idiom for registers.
 Each register→register pair with two explicit same-type operands is also
 measured with *the same register* for both operands — the scenario that
 explains the SHLD discrepancies between published numbers (§7.3.2).
+
+The inference is expressed as :mod:`repro.core.plan` measurement plans:
+:class:`LatencyPlans` is the machine-free plan factory — its one-wave
+``boot`` plan measures the chain-instruction latencies (§5.2: 'known or
+easy to determine in isolation'), and ``analyze`` plans fork one sub-plan
+per (source, dest) operand pair, so a :class:`~repro.core.plan
+.WaveScheduler` fuses chain benchmarks across pairs *and* across
+instructions. :class:`LatencyAnalyzer` remains the run-to-completion
+wrapper with the original eager-boot constructor.
 """
 from __future__ import annotations
 
@@ -29,6 +38,7 @@ from dataclasses import dataclass, field
 
 from repro.core.engine import Experiment, as_engine
 from repro.core.isa import FLAGS, GPR, IMM, ISA, MEM, VEC, InstrSpec
+from repro.core.plan import Fork, MeasurementPlan, run_plan
 from repro.core.simulator import Instr
 
 # dedicated registers (never handed out by pools sized 16/16/8)
@@ -67,27 +77,35 @@ class LatencyResult:
         return max(1, round(max(vals))) if vals else 1
 
 
-class LatencyAnalyzer:
-    """Per-pair latency inference through the measurement engine.
+class LatencyPlans:
+    """Machine-free plan factory for per-pair latency inference.
 
-    ``machine`` may be a machine or a :class:`MeasurementEngine`; every
-    dependency-chain benchmark is submitted as a declarative Experiment, so
-    chains shared between pairs (or re-run across analyses) execute once."""
+    One instance per characterization: ``boot_gen`` measures the chain
+    instruments once (idempotent — concurrent analyze plans that race into
+    it request identical experiments, which the engine dedups; they compute
+    identical constants). All measurement happens through plan yields, so
+    the same instance serves both the sequential wrapper and a scheduler
+    interleaving many instructions."""
 
-    def __init__(self, machine, isa: ISA):
-        self.engine = as_engine(machine)
-        self.machine = self.engine.machine
+    def __init__(self, isa: ISA):
         self.isa = isa
-        self._boot()
+        self._booted = False
+        self.lat_test = 1.0
+        self.lat_movsx = 0.0
+        self.lat_xor = 1.0
+        self.lat_setc = 1.0
+        self.vec_chains: dict[str, float] = {}
+        self.cross: dict[str, list] = {"to_gpr": [], "to_vec": []}
 
-    # -- low-level helpers --------------------------------------------------
-    def _cycles(self, seq: list[Instr]) -> float:
-        return self.engine.measure(Experiment.of(seq)).cycles
+    # -- low-level plan fragments (composed with ``yield from``) ------------
+    def _cycles(self, seq: list[Instr]):
+        c = yield [Experiment.of(seq)]
+        return c[0].cycles
 
-    def _cycles_wave(self, seqs: list[list[Instr]]) -> list[float]:
-        """Batched submission of independent chain benchmarks."""
-        return [c.cycles for c in
-                self.engine.submit([Experiment.of(s) for s in seqs])]
+    def _cycles_wave(self, seqs: list[list[Instr]]):
+        """Batched request of independent chain benchmarks."""
+        cs = yield [Experiment.of(s) for s in seqs]
+        return [c.cycles for c in cs]
 
     def _flags_break(self) -> Instr:
         return Instr("TEST_R64_R64", {"op1": BREAK_GPR, "op2": BREAK_GPR})
@@ -103,41 +121,48 @@ class LatencyAnalyzer:
     def _chain_instr(self, name: str, dst: str, src: str) -> Instr:
         return Instr(name, {"op1": dst, "op2": src})
 
-    def _boot(self):
-        """Measure the chain-instruction latencies (§5.2: 'known or easy to
-        determine in isolation'). TEST's reg→flags latency is the single
-        bootstrap assumption (= 1 cycle), as in the paper's methodology."""
-        self.lat_test = 1.0
+    def boot_gen(self):
+        """Chain-instruction latencies (§5.2), one wave. TEST's reg→flags
+        latency is the single bootstrap assumption (= 1 cycle), as in the
+        paper's methodology. Idempotent: a booted factory yields nothing."""
+        if self._booted:
+            return
+        isa = self.isa
         a, b = CHAIN_GPR
-        # MOVSX self-chain: MOVSX a,b ; MOVSX b,a
-        self.lat_movsx = self._cycles([
-            self._chain_instr("MOVSX_R64_R32", a, b),
-            self._chain_instr("MOVSX_R64_R32", b, a)]) / 2
         va, vb = CHAIN_VEC
-        self.vec_chains = {}
-        for nm in ("PSHUFD_X_X", "MOVSHDUP_X_X"):
-            if nm in self.isa:
-                self.vec_chains[nm] = self._cycles([
-                    self._chain_instr(nm, va, vb),
-                    self._chain_instr(nm, vb, va)]) / 2
+        wave: list[tuple[str, list[Instr]]] = []
+        # MOVSX self-chain: MOVSX a,b ; MOVSX b,a
+        wave.append(("movsx", [self._chain_instr("MOVSX_R64_R32", a, b),
+                               self._chain_instr("MOVSX_R64_R32", b, a)]))
+        vec_names = [nm for nm in ("PSHUFD_X_X", "MOVSHDUP_X_X")
+                     if nm in isa]
+        for nm in vec_names:
+            wave.append((nm, [self._chain_instr(nm, va, vb),
+                              self._chain_instr(nm, vb, va)]))
         # XOR lat(op1,op1): XOR a, aux (RMW self-chain; flags written only)
-        self.lat_xor = (self._cycles([
-            Instr("XOR_R64_R64", {"op1": a, "op2": AUX_GPR[0]})])
-            if "XOR_R64_R64" in self.isa else 1.0)
+        if "XOR_R64_R64" in isa:
+            wave.append(("xor", [Instr("XOR_R64_R64",
+                                       {"op1": a, "op2": AUX_GPR[0]})]))
         # SETC via TEST+SETC+MOVSX loop
-        if "TEST_R64_R64" in self.isa and "SETC_R8" in self.isa:
-            mv = ("MOVSX_R64_R8" if "MOVSX_R64_R8" in self.isa
+        have_setc = "TEST_R64_R64" in isa and "SETC_R8" in isa
+        if have_setc:
+            mv = ("MOVSX_R64_R8" if "MOVSX_R64_R8" in isa
                   else "MOVSX_R64_R32")
-            comp = self._cycles([
+            wave.append(("setc", [
                 Instr("TEST_R64_R64", {"op1": a, "op2": a}),
                 Instr("SETC_R8", {"op1": b}),
-                self._chain_instr(mv, a, b)])
-            self.lat_setc = max(comp - self.lat_test - self.lat_movsx, 0.0)
-        else:
-            self.lat_setc = 1.0
+                self._chain_instr(mv, a, b)]))
+        cycles = yield from self._cycles_wave([seq for _, seq in wave])
+        got = dict(zip((k for k, _ in wave), cycles))
+        self.lat_test = 1.0
+        self.lat_movsx = got["movsx"] / 2
+        self.vec_chains = {nm: got[nm] / 2 for nm in vec_names}
+        self.lat_xor = got.get("xor", 1.0)
+        self.lat_setc = (max(got["setc"] - self.lat_test - self.lat_movsx,
+                             0.0) if have_setc else 1.0)
         # type-crossing chain candidates: (vec->gpr) and (gpr->vec) movers
         self.cross = {"to_gpr": [], "to_vec": []}
-        for s in self.isa:
+        for s in isa:
             ops = s.explicit_operands
             if len(ops) != 2 or any(o.otype == IMM for o in ops):
                 continue
@@ -147,6 +172,11 @@ class LatencyAnalyzer:
                     self.cross["to_gpr"].append(s.name)
                 elif d.otype == VEC and src.otype == GPR:
                     self.cross["to_vec"].append(s.name)
+        self._booted = True
+
+    def boot_plan(self) -> MeasurementPlan:
+        return MeasurementPlan(self.boot_gen(), name="latency-boot",
+                               phase="latency")
 
     # -- link builders ------------------------------------------------------
     def _breakers(self, spec: InstrSpec, skip: set) -> list[Instr]:
@@ -202,8 +232,9 @@ class LatencyAnalyzer:
                 link.append(self._chain_instr(cname, ca, cb))
                 offsets.append(clat)
             links.append(link)
+        cycles = yield from self._cycles_wave(links)
         per_chain = {cname: cyc - off for cname, cyc, off
-                     in zip(chains, self._cycles_wave(links), offsets)}
+                     in zip(chains, cycles, offsets)}
         val = min(per_chain.values())
         e = LatencyEntry(s.name, d.name, val, "exact",
                          chain="|".join(per_chain), per_chain=per_chain)
@@ -214,7 +245,7 @@ class LatencyAnalyzer:
             regs = self._assign(spec, {s.name: ca, d.name: ca})
             link = self._breakers(spec, {s.name, d.name})
             link.append(Instr(spec.name, regs, value_hint))
-            e.same_reg = self._cycles(link)
+            e.same_reg = yield from self._cycles(link)
         return e
 
     def _flags_to_reg(self, spec, s, d):
@@ -225,8 +256,8 @@ class LatencyAnalyzer:
             link.append(self._reg_break(ca, GPR))
         regs = self._assign(spec, {d.name: ca})
         link.append(Instr(spec.name, regs))
-        return LatencyEntry(s.name, d.name,
-                            self._cycles(link) - self.lat_test,
+        cyc = yield from self._cycles(link)
+        return LatencyEntry(s.name, d.name, cyc - self.lat_test,
                             "exact", chain="TEST")
 
     def _reg_to_flags(self, spec, s, d):
@@ -239,15 +270,17 @@ class LatencyAnalyzer:
         link.append(Instr("SETC_R8", {"op1": cb}))
         # width-matched MOVSX: SETC writes 8 bits; reading wider would incur
         # a partial-register stall and corrupt the measurement (§5.2.1)
-        mv = "MOVSX_R64_R8" if "MOVSX_R64_R8" in self.isa else "MOVSX_R64_R32"
+        mv = ("MOVSX_R64_R8" if "MOVSX_R64_R8" in self.isa
+              else "MOVSX_R64_R32")
         link.append(self._chain_instr(mv, ca, cb))
-        val = self._cycles(link) - self.lat_setc - self.lat_movsx
+        cyc = yield from self._cycles(link)
+        val = cyc - self.lat_setc - self.lat_movsx
         return LatencyEntry(s.name, d.name, val, "exact", chain="SETC+MOVSX")
 
     def _flags_to_flags(self, spec, s, d):
         link = [Instr(spec.name, self._assign(spec, {}))]
-        return LatencyEntry(s.name, d.name, self._cycles(link), "exact",
-                            chain="self")
+        cyc = yield from self._cycles(link)
+        return LatencyEntry(s.name, d.name, cyc, "exact", chain="self")
 
     def _mem_to_reg(self, spec, s, d):
         """Double-XOR trick: address depends on the loaded result (§5.2.2)."""
@@ -267,8 +300,9 @@ class LatencyAnalyzer:
                          Instr("XOR_R64_R64", {"op1": rb, "op2": CHAIN_GPR[0]}),
                          self._flags_break()]
                 links.append(link)
+            cycles = yield from self._cycles_wave(links)
             per = {mv: cyc - 2 * self.lat_xor for mv, cyc
-                   in zip(self.cross["to_gpr"], self._cycles_wave(links))}
+                   in zip(self.cross["to_gpr"], cycles)}
             best = min(per.values())
             return LatencyEntry(s.name, d.name, max(best - 1, 0),
                                 "upper_bound", chain="xor2+cross",
@@ -278,8 +312,8 @@ class LatencyAnalyzer:
         link.append(Instr("XOR_R64_R64", {"op1": rb, "op2": rd}))
         link.append(Instr("XOR_R64_R64", {"op1": rb, "op2": rd}))
         link.append(self._flags_break())
-        return LatencyEntry(s.name, d.name,
-                            self._cycles(link) - 2 * self.lat_xor,
+        cyc = yield from self._cycles(link)
+        return LatencyEntry(s.name, d.name, cyc - 2 * self.lat_xor,
                             "exact", chain="xor2")
 
     def _reg_to_mem(self, spec, s, d):
@@ -299,7 +333,8 @@ class LatencyAnalyzer:
                 Instr(load, {"op1": cb, "mem": rb})]
         if chain:
             link.append(self._chain_instr(chain, ca, cb))
-        val = self._cycles(link) - clat
+        cyc = yield from self._cycles(link)
+        val = cyc - clat
         return LatencyEntry(s.name, d.name, val, "roundtrip",
                             chain=f"store+{load}")
 
@@ -330,42 +365,92 @@ class LatencyAnalyzer:
                 link.append(Instr(mv, {"op1": CHAIN_VEC[0],
                                        "op2": CHAIN_GPR[0]}))
                 links.append(link)
-        per = dict(zip(movers, self._cycles_wave(links)))
+        cycles = yield from self._cycles_wave(links)
+        per = dict(zip(movers, cycles))
         if not per:
             return None
         return LatencyEntry(s.name, d.name, max(min(per.values()) - 1, 0),
                             "upper_bound", chain="compose", per_chain=per)
 
-    # -- public entry point ---------------------------------------------------
-    def analyze(self, instr: InstrSpec | str) -> LatencyResult:
-        spec = self.isa[instr] if isinstance(instr, str) else instr
-        res = LatencyResult(spec.name)
-        for s in spec.sources:
-            if s.otype == IMM:
-                continue
-            for d in spec.dests:
-                e = self._pair(spec, s, d)
-                if e is not None:
-                    if spec.uses_divider and e.kind == "exact":
-                        eh = self._pair(spec, s, d, value_hint="high")
-                        if eh is not None:
-                            e.high_value = eh.value
-                    res.entries[(s.name, d.name)] = e
-        return res
-
-    def _pair(self, spec, s, d, value_hint="low"):
+    # -- pair dispatch -------------------------------------------------------
+    def _pair_gen(self, spec, s, d, value_hint="low"):
         if s.otype == FLAGS and d.otype == FLAGS:
-            return self._flags_to_flags(spec, s, d)
+            return (yield from self._flags_to_flags(spec, s, d))
         if s.otype == FLAGS:
             if d.otype != GPR:
                 return None
-            return self._flags_to_reg(spec, s, d)
+            return (yield from self._flags_to_reg(spec, s, d))
         if d.otype == FLAGS:
-            return self._reg_to_flags(spec, s, d)
+            return (yield from self._reg_to_flags(spec, s, d))
         if s.otype == MEM:
-            return self._mem_to_reg(spec, s, d)
+            return (yield from self._mem_to_reg(spec, s, d))
         if d.otype == MEM:
-            return self._reg_to_mem(spec, s, d)
+            return (yield from self._reg_to_mem(spec, s, d))
         if s.otype == d.otype:
-            return self._reg_reg(spec, s, d, value_hint)
-        return self._cross_type(spec, s, d)
+            return (yield from self._reg_reg(spec, s, d, value_hint))
+        return (yield from self._cross_type(spec, s, d))
+
+    def _pair_full_gen(self, spec, s, d):
+        e = yield from self._pair_gen(spec, s, d)
+        if e is not None and spec.uses_divider and e.kind == "exact":
+            eh = yield from self._pair_gen(spec, s, d, value_hint="high")
+            if eh is not None:
+                e.high_value = eh.value
+        return e
+
+    # -- per-instruction plan ------------------------------------------------
+    def analyze_gen(self, spec: InstrSpec):
+        yield from self.boot_gen()
+        pairs = [(s, d) for s in spec.sources if s.otype != IMM
+                 for d in spec.dests]
+        entries = yield Fork([
+            MeasurementPlan(self._pair_full_gen(spec, s, d),
+                            name=f"lat[{spec.name}:{s.name}->{d.name}]",
+                            phase="latency")
+            for s, d in pairs])
+        res = LatencyResult(spec.name)
+        for (s, d), e in zip(pairs, entries):
+            if e is not None:
+                res.entries[(s.name, d.name)] = e
+        return res
+
+    def analyze_plan(self, instr: InstrSpec | str) -> MeasurementPlan:
+        spec = self.isa[instr] if isinstance(instr, str) else instr
+        return MeasurementPlan(self.analyze_gen(spec),
+                               name=f"latency[{spec.name}]", phase="latency")
+
+
+def latency_plan(spec: InstrSpec | str, isa: ISA,
+                 plans: LatencyPlans | None = None) -> MeasurementPlan:
+    """Per-operand-pair latency inference for one instruction as a plan.
+
+    Pass a shared :class:`LatencyPlans` so many instructions' plans reuse
+    one boot (a fresh factory boots itself on first use)."""
+    return (plans or LatencyPlans(isa)).analyze_plan(spec)
+
+
+class LatencyAnalyzer:
+    """Per-pair latency inference, run to completion on one machine.
+
+    ``machine`` may be a machine or a :class:`MeasurementEngine`; every
+    dependency-chain benchmark is a declarative Experiment requested by the
+    underlying :class:`LatencyPlans`, so chains shared between pairs (or
+    re-run across analyses) execute once. Boot measurements happen eagerly
+    at construction, as before; boot constants (``lat_movsx``,
+    ``vec_chains``, ``cross``, …) remain readable on the analyzer."""
+
+    def __init__(self, machine, isa: ISA):
+        self.engine = as_engine(machine)
+        self.machine = self.engine.machine
+        self.isa = isa
+        self.plans = LatencyPlans(isa)
+        run_plan(self.engine, self.plans.boot_plan())
+
+    def __getattr__(self, name):
+        # boot constants (lat_movsx, lat_setc, vec_chains, cross, ...)
+        if name == "plans":    # guard: no recursion before __init__ sets it
+            raise AttributeError(name)
+        return getattr(self.plans, name)
+
+    def analyze(self, instr: InstrSpec | str) -> LatencyResult:
+        return run_plan(self.engine, self.plans.analyze_plan(instr))

@@ -134,6 +134,20 @@ def total_uops(machine, spec: InstrSpec, pool: RegPool | None = None,
     return uops_from_counters(c, n)
 
 
+def _total_uops_gen(spec: InstrSpec, n: int):
+    c = yield [independent_experiment(spec, n)]
+    return uops_from_counters(c[0], n)
+
+
+def total_uops_plan(spec: InstrSpec, n: int = 12):
+    """:func:`total_uops` as a single-wave measurement plan — the same
+    Experiment as the isolation run, so under a scheduler the μop count
+    and Algorithm 1's isolation measurement share one execution."""
+    from repro.core.plan import MeasurementPlan  # noqa: PLC0415
+    return MeasurementPlan(_total_uops_gen(spec, n),
+                           name=f"uops[{spec.name}]", phase="uops")
+
+
 def isolation_ports(machine, spec: InstrSpec, n: int = 12,
                     eps: float = 0.05) -> dict[str, float]:
     """Per-port μop distribution when run in isolation (the naive signal

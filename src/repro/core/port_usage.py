@@ -11,11 +11,19 @@ Includes both optimizations from the paper: iterate only over combinations
 intersecting the isolation-measurement ports, and exit early once the
 attributed μop count reaches the instruction's total μop count.
 
-Experiments are submitted to the measurement engine one combination-size
-tier at a time: all |pc|=1 experiments in one batch, then |pc|=2, ... —
-attribution (and the early exit) only ever depends on smaller combinations,
-so batching within a tier is exact, and the early exit still skips whole
-tiers of useless measurements.
+The algorithm is a :mod:`repro.core.plan` measurement plan
+(:func:`port_usage_plan`): the isolation run is one yield, then one yield
+per combination-size tier — all |pc|=1 experiments in one batch, then
+|pc|=2, ... Attribution (and the early exit) only ever depends on smaller
+combinations, so batching within a tier is exact, and the early exit still
+skips whole tiers of useless measurements. Under a
+:class:`~repro.core.plan.WaveScheduler`, many instructions' tiers fuse into
+shared waves; :func:`infer_port_usage` remains the run-to-completion
+wrapper over a single instruction's plan.
+
+``n_ports`` (the machine's port count, a lower bound on blockRep) is the
+one machine parameter a plan needs; wrappers fill it from the machine, and
+:func:`~repro.core.characterize.characterize_plan` threads it through.
 """
 from __future__ import annotations
 
@@ -28,6 +36,9 @@ from repro.core.isa import ISA, InstrSpec
 from repro.core.machine import (RegPool, fresh_instance,
                                 independent_experiment, ports_from_counters,
                                 uops_from_counters)
+from repro.core.plan import MeasurementPlan, run_plan
+
+BLOCK_REP_CAP = 64
 
 
 @dataclass
@@ -45,16 +56,11 @@ class PortUsage:
         return "+".join(parts) if parts else "0"
 
 
-def infer_port_usage(machine, isa: ISA, instr: InstrSpec | str,
-                     blocking: BlockingSet, max_latency: int,
-                     block_rep_cap: int = 64) -> PortUsage:
-    """Algorithm 1. ``max_latency``: max over the instruction's latency
-    pairs (§5.2), used to size blockRep = 8 * maxLatency."""
-    engine = as_engine(machine)
-    spec = isa[instr] if isinstance(instr, str) else instr
+def _port_usage_gen(spec: InstrSpec, isa: ISA, blocking: BlockingSet,
+                    max_latency: int, n_ports: int, block_rep_cap: int):
     pool = RegPool()
     result = PortUsage()
-    iso = engine.measure(independent_experiment(spec, 12))
+    [iso] = yield [independent_experiment(spec, 12)]
     result.total_uops = round(uops_from_counters(iso, 12), 2)
     result.isolation = ports_from_counters(iso, 12)
     iso_ports = set(result.isolation)
@@ -63,7 +69,6 @@ def infer_port_usage(machine, isa: ISA, instr: InstrSpec | str,
     combos = [pc for pc in blocking.combos() if pc & iso_ports]
     combos.sort(key=lambda pc: (len(pc), sorted(pc)))
 
-    n_ports = len(engine.machine.ports)
     block_rep = min(max(8 * max_latency, n_ports), block_rep_cap)
 
     def blocked_experiment(pc) -> Experiment:
@@ -83,7 +88,7 @@ def infer_port_usage(machine, isa: ISA, instr: InstrSpec | str,
         if attributed >= round(result.total_uops):
             break
         tier = list(tier)
-        counters = engine.submit([blocked_experiment(pc) for pc in tier])
+        counters = yield [blocked_experiment(pc) for pc in tier]
         for pc, c in zip(tier, counters):
             uops = sum(c.port_uops.get(p, 0.0) for p in pc)
             uops -= block_rep * blocking.uops_on_pc[pc]           # line 7
@@ -97,3 +102,27 @@ def infer_port_usage(machine, isa: ISA, instr: InstrSpec | str,
             if attributed >= round(result.total_uops):
                 break
     return result
+
+
+def port_usage_plan(spec: InstrSpec, isa: ISA, blocking: BlockingSet,
+                    max_latency: int, *, n_ports: int,
+                    block_rep_cap: int = BLOCK_REP_CAP) -> MeasurementPlan:
+    """Algorithm 1 as a plan. ``max_latency``: max over the instruction's
+    latency pairs (§5.2), used to size blockRep = 8 * maxLatency; ``n_ports``
+    is the target machine's port count (lower bound on blockRep)."""
+    return MeasurementPlan(
+        _port_usage_gen(spec, isa, blocking, max_latency, n_ports,
+                        block_rep_cap),
+        name=f"ports[{spec.name}]", phase="ports")
+
+
+def infer_port_usage(machine, isa: ISA, instr: InstrSpec | str,
+                     blocking: BlockingSet, max_latency: int,
+                     block_rep_cap: int = BLOCK_REP_CAP) -> PortUsage:
+    """Algorithm 1, run to completion on one machine (wrapper over
+    :func:`port_usage_plan`)."""
+    engine = as_engine(machine)
+    spec = isa[instr] if isinstance(instr, str) else instr
+    return run_plan(engine, port_usage_plan(
+        spec, isa, blocking, max_latency,
+        n_ports=len(engine.machine.ports), block_rep_cap=block_rep_cap))

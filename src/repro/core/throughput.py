@@ -16,7 +16,10 @@ Two notions are produced for every instruction:
   value annotated instead.
 
 All sequence lengths (and the divider high-operand variants) are independent
-experiments, submitted to the measurement engine as one batched wave.
+experiments, requested as one wave by a single-yield measurement plan
+(:func:`throughput_plan`); under a :class:`~repro.core.plan.WaveScheduler`
+many instructions' throughput waves fuse into one. ``measure_throughput``
+remains the run-to-completion wrapper.
 """
 from __future__ import annotations
 
@@ -27,6 +30,7 @@ from repro.core.isa import FLAGS, ISA, InstrSpec
 from repro.core.lp import throughput_lp
 from repro.core.machine import (RegPool, flags_breaker, independent_experiment,
                                 independent_seq)
+from repro.core.plan import MeasurementPlan, run_plan
 from repro.core.port_usage import PortUsage
 
 SEQ_LENS = (1, 2, 4, 8)
@@ -42,10 +46,7 @@ class ThroughputResult:
     high_value: float | None = None  # divider worst-case operand class
 
 
-def measure_throughput(machine, isa: ISA, instr: InstrSpec | str,
-                       value_hint: str = "low") -> ThroughputResult:
-    engine = as_engine(machine)
-    spec = isa[instr] if isinstance(instr, str) else instr
+def _throughput_gen(spec: InstrSpec, isa: ISA, value_hint: str):
     res = ThroughputResult(spec.name)
 
     wave = [independent_experiment(spec, n, value_hint) for n in SEQ_LENS]
@@ -63,7 +64,7 @@ def measure_throughput(machine, isa: ISA, instr: InstrSpec | str,
     if spec.uses_divider:
         wave += [independent_experiment(spec, n, "high") for n in SEQ_LENS]
 
-    counters = engine.submit(wave)
+    counters = yield wave
 
     best = None
     for n, c in zip(lens, counters[:len(lens)]):
@@ -86,6 +87,22 @@ def measure_throughput(machine, isa: ISA, instr: InstrSpec | str,
             hi = cyc if hi is None else min(hi, cyc)
         res.high_value = hi
     return res
+
+
+def throughput_plan(spec: InstrSpec, isa: ISA,
+                    value_hint: str = "low") -> MeasurementPlan:
+    """§5.3.1 measured throughput as a single-wave plan."""
+    return MeasurementPlan(_throughput_gen(spec, isa, value_hint),
+                           name=f"throughput[{spec.name}]",
+                           phase="throughput")
+
+
+def measure_throughput(machine, isa: ISA, instr: InstrSpec | str,
+                       value_hint: str = "low") -> ThroughputResult:
+    """Run-to-completion wrapper over :func:`throughput_plan`."""
+    spec = isa[instr] if isinstance(instr, str) else instr
+    return run_plan(as_engine(machine), throughput_plan(spec, isa,
+                                                        value_hint))
 
 
 def computed_throughput(usage: PortUsage, spec: InstrSpec) -> float | None:

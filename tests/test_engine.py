@@ -18,7 +18,7 @@ from repro.core.engine import (Campaign, Experiment, MeasurementEngine,
 from repro.core.isa import TEST_ISA
 from repro.core.machine import RegPool, independent_seq, measure
 from repro.core.port_usage import infer_port_usage
-from repro.core.simulator import SimMachine
+from repro.core.simulator import Instr, SimMachine
 from repro.core.uarch import SIM_UARCHES, random_uarch_and_isa
 
 SUBSET = ["ADD_R64_R64", "ADC_R64_R64", "MOVQ2DQ_X_X", "MUL_R64",
@@ -134,6 +134,54 @@ def test_port_usage_cache_invariant_on_random_ground_truths(seed):
         without = infer_port_usage(MeasurementEngine(m, enabled=False), isa,
                                    name, blocking, max_latency=4).usage
         assert with_cache == without == truth[name]
+
+
+# ---------------------------------------------------------------------------
+# cache-key stability
+# ---------------------------------------------------------------------------
+
+
+# Golden keys: Experiment.cache_key is the address of every persisted
+# measurement. An accidental change to the canonicalization (operand
+# ordering, hint formatting, separator choice, run-param encoding) would
+# silently invalidate every on-disk cache — these constants make it loud.
+GOLDEN_KEYS = [
+    (lambda: Experiment.of([Instr("ADD_R64_R64",
+                                  {"op1": "R0", "op2": "R1"})]),
+     "280217329b7a9fccd0f54dcdc2e6056076776171b82513e68e72192200dbf6eb"),
+    # operand-order independence: same key as above
+    (lambda: Experiment.of([Instr("ADD_R64_R64",
+                                  {"op2": "R1", "op1": "R0"})]),
+     "280217329b7a9fccd0f54dcdc2e6056076776171b82513e68e72192200dbf6eb"),
+    # value hint is part of the address
+    (lambda: Experiment.of([Instr("DIV_R64", {"op1": "R0"}, "high")]),
+     "a108431400fe6d72d07a82e1e0395078182855979d03197cbf85d571fa3a4e9a"),
+    # multi-instruction sequence
+    (lambda: Experiment.of([Instr("IMUL_R64_R64", {"op1": "R2",
+                                                   "op2": "R3"}),
+                            Instr("TEST_R64_R64", {"op1": "R4",
+                                                   "op2": "R4"})]),
+     "0f67b8bf24d4bc8c2460773ed583bdaf23b0b2692290e06f241357aa6bd43717"),
+    # Algorithm-2 run params are part of the address
+    (lambda: Experiment.of([Instr("ADD_R64_R64",
+                                  {"op1": "R0", "op2": "R1"})],
+                           n_small=5, n_large=55),
+     "56c1d66c9089660fd2ac27dac3380809b5dc94b461beaa56a91771bc33789ad8"),
+]
+
+
+@pytest.mark.parametrize("make,expect",
+                         GOLDEN_KEYS, ids=[f"golden{i}" for i in
+                                           range(len(GOLDEN_KEYS))])
+def test_cache_key_golden_values(make, expect):
+    assert make().cache_key("sim_skl") == expect
+
+
+def test_cache_key_depends_on_uarch():
+    e = GOLDEN_KEYS[0][0]()
+    assert e.cache_key("sim_hsw") == \
+        "c035a4ae88d8ddaee06741943afe537983ce0ab3a332512c3a2d9fc9f6d5f646"
+    assert e.cache_key("sim_hsw") != e.cache_key("sim_skl")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,362 @@
+"""Measurement-plan API: resumable plans driven by a wave scheduler.
+
+Load-bearing claims: (1) driving plans through a WaveScheduler fuses many
+plans' experiment batches into shared super-waves (deduped across plans by
+the engine) without changing any inference result — fused and sequential
+drivers are byte-identical; (2) fork fan-out preserves result order and
+nests; (3) the drain-everything-then-execute round structure means no plan
+starves; (4) failures cancel cleanly: a raised exception closes sibling
+plans, a shared cancel event aborts a scheduler at its next wave boundary,
+and a Campaign worker failure surfaces the original error instead of a
+hung pool or a partial result.
+"""
+import threading
+
+import pytest
+
+from repro.core import model_io
+from repro.core.blocking import blocking_plan, find_blocking_instructions
+from repro.core.characterize import characterize
+from repro.core.engine import Campaign, Experiment, MeasurementEngine
+from repro.core.isa import TEST_ISA
+from repro.core.latency import LatencyAnalyzer, LatencyPlans
+from repro.core.machine import RegPool, independent_seq
+from repro.core.plan import (Fork, MeasurementPlan, PlanCancelled,
+                             SchedulerStats, WaveScheduler, run_plan)
+from repro.core.port_usage import infer_port_usage, port_usage_plan
+from repro.core.simulator import Counters, SimMachine
+from repro.core.throughput import measure_throughput, throughput_plan
+from repro.core.uarch import SIM_UARCHES
+
+SUBSET = ["ADD_R64_R64", "ADC_R64_R64", "MOVQ2DQ_X_X", "MUL_R64",
+          "SHLD_R64_R64_I8", "MOV_M64_R64", "DIV_R64", "AESDEC_X_X",
+          "IMUL_R64_M64", "CMC"]
+
+
+class StubMachine:
+    """Deterministic counter source for scheduler-mechanics tests: cycles =
+    sequence length, one port-0 μop per instruction."""
+
+    def __init__(self):
+        self.name = "stub"
+        self.ports = ("0",)
+        self.runs = 0
+
+    def run(self, code):
+        self.runs += 1
+        return Counters(float(len(code)), {"0": float(len(code))})
+
+
+def _exp(tag: str, k: int = 1) -> Experiment:
+    """Distinct experiments per (tag, k): spec name carries the tag."""
+    from repro.core.simulator import Instr
+    return Experiment.of([Instr(f"T_{tag}", {"op1": f"R{i}"})
+                          for i in range(k)])
+
+
+def _skl():
+    return SimMachine(SIM_UARCHES["sim_skl"], TEST_ISA)
+
+
+# ---------------------------------------------------------------------------
+# scheduler mechanics (stub machine)
+# ---------------------------------------------------------------------------
+
+
+def test_single_plan_yield_receives_counters_in_order():
+    def gen():
+        c = yield [_exp("a", 1), _exp("b", 2), _exp("a", 1)]
+        assert [x.cycles for x in c] == [1.0, 2.0, 1.0]
+        return "done"
+
+    sched = WaveScheduler(MeasurementEngine(StubMachine()))
+    assert sched.run([gen()]) == ["done"]
+    assert sched.stats.waves == 1
+    assert sched.stats.experiments == 3
+
+
+def test_waves_fuse_across_plans_and_dedup_hits_engine_once():
+    def gen(tag):
+        c = yield [_exp(tag), _exp("shared")]
+        c2 = yield [_exp(tag, 2)]
+        return (c[0].cycles, c2[0].cycles)
+
+    engine = MeasurementEngine(StubMachine())
+    sched = WaveScheduler(engine)
+    out = sched.run([gen("x"), gen("y"), gen("z")])
+    assert out == [(1.0, 2.0)] * 3
+    # both rounds fused: 3 plans x 2 batches -> 2 super-waves, not 6
+    assert sched.stats.waves == 2
+    assert sched.stats.experiments == 6 + 3
+    # "shared" deduped across plans inside the fused wave
+    assert engine.stats.dedup_hits == 2
+    assert engine.stats.executions == 4 + 3
+
+
+def test_fork_results_ordered_and_nested():
+    def leaf(n):
+        c = yield [_exp(f"leaf{n}", n)]
+        return c[0].cycles
+
+    def mid(n):
+        vals = yield Fork([leaf(n), leaf(n + 1)])
+        return vals
+
+    def root():
+        a, b = yield Fork([mid(1), mid(3)])
+        return (a, b)
+
+    sched = WaveScheduler(MeasurementEngine(StubMachine()))
+    assert sched.run([root()]) == [([1.0, 2.0], [3.0, 4.0])]
+    # all four leaves fused into one wave
+    assert sched.stats.waves == 1
+    assert sched.stats.plans_completed == 7  # root + 2 mids + 4 leaves
+
+
+def test_empty_wave_and_empty_fork_resume_immediately():
+    def gen():
+        a = yield []
+        b = yield Fork([])
+        c = yield [_exp("x")]
+        return (a, b, c[0].cycles)
+
+    sched = WaveScheduler(MeasurementEngine(StubMachine()))
+    assert sched.run([gen()]) == [([], [], 1.0)]
+    assert sched.stats.waves == 1
+
+
+def test_no_plan_starves_rounds_follow_the_longest_plan():
+    """Every runnable plan is stepped each round: a 1-round plan and a
+    5-round plan co-scheduled -> exactly 5 fused waves, and the short
+    plan's result is available after round 1 (checked via completion)."""
+    def short():
+        yield [_exp("s")]
+        return "short"
+
+    def long():
+        for i in range(5):
+            yield [_exp(f"l{i}")]
+        return "long"
+
+    sched = WaveScheduler(MeasurementEngine(StubMachine()))
+    assert sched.run([long(), short(), long()]) == ["long", "short", "long"]
+    assert sched.stats.waves == 5
+
+
+def test_cancel_event_aborts_with_plancancelled():
+    ev = threading.Event()
+
+    def gen():
+        yield [_exp("a")]
+        ev.set()                     # set mid-run: next round must abort
+        yield [_exp("b")]
+        return "never"
+
+    closed = []
+
+    def witness():
+        try:
+            for i in range(10):
+                yield [_exp(f"w{i}")]
+        finally:
+            closed.append(True)
+
+    sched = WaveScheduler(MeasurementEngine(StubMachine()), cancel=ev)
+    with pytest.raises(PlanCancelled):
+        sched.run([gen(), witness()])
+    assert closed == [True], "sibling plan was not closed on cancellation"
+
+
+def test_plan_exception_propagates_and_closes_siblings():
+    class Boom(RuntimeError):
+        pass
+
+    def bad():
+        yield [_exp("a")]
+        raise Boom("plan failed")
+
+    closed = []
+
+    def witness():
+        try:
+            for i in range(10):
+                yield [_exp(f"w{i}")]
+        finally:
+            closed.append(True)
+
+    sched = WaveScheduler(MeasurementEngine(StubMachine()))
+    with pytest.raises(Boom, match="plan failed"):
+        sched.run([bad(), witness()])
+    assert closed == [True]
+
+
+def test_run_plan_sequential_driver_matches_scheduler():
+    def gen():
+        c = yield [_exp("a"), _exp("b", 2)]
+        [d] = yield Fork([_sub(c[1].cycles)])
+        return d
+
+    def _sub(x):
+        c = yield [_exp("s", int(x))]
+        return c[0].cycles + x
+
+    st = SchedulerStats()
+    seq = run_plan(MeasurementEngine(StubMachine()), gen(), stats=st)
+    fused = WaveScheduler(MeasurementEngine(StubMachine())).run([gen()])[0]
+    assert seq == fused == 4.0
+    assert st.waves == 2          # sequential: one wave per yield
+
+
+# ---------------------------------------------------------------------------
+# inference plans == legacy wrappers (real machine)
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_driven_plans_match_legacy_wrappers(skl_machine,
+                                                     skl_blocking):
+    engine = MeasurementEngine(_skl())
+    sched = WaveScheduler(engine)
+    lat = LatencyPlans(TEST_ISA)
+    names = ["MOVQ2DQ_X_X", "SHLD_R64_R64_I8", "ADC_R64_R64"]
+    plans = [blocking_plan(TEST_ISA)]
+    plans += [lat.analyze_plan(n) for n in names]
+    plans += [port_usage_plan(TEST_ISA[n], TEST_ISA, skl_blocking, 4,
+                              n_ports=len(skl_machine.ports))
+              for n in names]
+    plans += [throughput_plan(TEST_ISA[n], TEST_ISA) for n in names]
+    out = sched.run(plans)
+    assert sched.stats.waves < len(plans), "no cross-plan fusion happened"
+
+    blocking = out[0]
+    assert blocking.instrs == find_blocking_instructions(
+        skl_machine, TEST_ISA).instrs
+    la = LatencyAnalyzer(_skl(), TEST_ISA)
+    for i, n in enumerate(names):
+        assert out[1 + i].entries == la.analyze(n).entries
+        assert out[4 + i].usage == infer_port_usage(
+            _skl(), TEST_ISA, n, skl_blocking, 4).usage
+        ref_tp = measure_throughput(_skl(), TEST_ISA, n)
+        assert out[7 + i].measured == ref_tp.measured
+        assert out[7 + i].by_seq_len == ref_tp.by_seq_len
+
+
+@pytest.mark.parametrize("uarch", sorted(SIM_UARCHES))
+def test_characterize_fused_byte_identical_to_sequential(uarch):
+    m = SimMachine(SIM_UARCHES[uarch], TEST_ISA)
+    fused = characterize(MeasurementEngine(m), TEST_ISA, SUBSET)
+    seq = characterize(MeasurementEngine(SimMachine(SIM_UARCHES[uarch],
+                                                    TEST_ISA)),
+                       TEST_ISA, SUBSET, sequential=True)
+    assert model_io.to_xml(fused, TEST_ISA) == model_io.to_xml(seq, TEST_ISA)
+    # the whole point: far fewer, far wider waves
+    assert fused.wave_stats["waves"] < seq.wave_stats["waves"] / 4
+    assert fused.wave_stats["mean_wave_width"] >= \
+        5 * seq.wave_stats["mean_wave_width"]
+    assert fused.wave_stats["experiments"] == seq.wave_stats["experiments"]
+
+
+def test_characterize_records_phase_seconds_and_wave_stats():
+    phases = {"blocking", "latency", "uops", "ports", "throughput"}
+    model = characterize(MeasurementEngine(_skl()), TEST_ISA,
+                         ["ADD_R64_R64", "MUL_R64"])
+    assert model.phase_seconds.keys() >= phases
+    assert model.wave_stats["mean_wave_width"] > 1
+    assert model.engine_stats["requests"] > 0
+    # the sequential reference driver records the same telemetry shape
+    seq = characterize(MeasurementEngine(_skl()), TEST_ISA,
+                       ["ADD_R64_R64", "MUL_R64"], sequential=True)
+    assert seq.phase_seconds.keys() >= phases
+
+
+def test_characterize_rejects_conflicting_driver_arguments():
+    engine = MeasurementEngine(_skl())
+    sched = WaveScheduler(engine)
+    with pytest.raises(ValueError, match="shared scheduler"):
+        characterize(engine, TEST_ISA, ["ADD_R64_R64"], scheduler=sched,
+                     cancel=threading.Event())
+    with pytest.raises(ValueError, match="sequential"):
+        characterize(engine, TEST_ISA, ["ADD_R64_R64"], scheduler=sched,
+                     sequential=True)
+    with pytest.raises(ValueError, match="sequential"):
+        characterize(engine, TEST_ISA, ["ADD_R64_R64"], sequential=True,
+                     cancel=threading.Event())
+    other = MeasurementEngine(_skl())
+    with pytest.raises(ValueError, match="different engine"):
+        characterize(engine, TEST_ISA, ["ADD_R64_R64"],
+                     scheduler=WaveScheduler(other))
+
+
+def test_shared_scheduler_wave_stats_are_per_run_deltas():
+    engine = MeasurementEngine(_skl())
+    sched = WaveScheduler(engine)
+    m1 = characterize(engine, TEST_ISA, ["ADD_R64_R64", "MUL_R64"],
+                      scheduler=sched)
+    m2 = characterize(engine, TEST_ISA, ["ADC_R64_R64"], scheduler=sched)
+    # the second run's stats must not include the first run's
+    assert m2.wave_stats["experiments"] < m1.wave_stats["experiments"]
+    assert m2.wave_stats["plans_completed"] < \
+        m1.wave_stats["plans_completed"]
+    assert m2.wave_stats["max_wave_width"] <= \
+        m1.wave_stats["max_wave_width"]
+    for m in (m1, m2):
+        assert m.wave_stats["mean_wave_width"] == pytest.approx(
+            m.wave_stats["experiments"] / max(1, m.wave_stats["waves"]),
+            abs=0.01)
+
+
+# ---------------------------------------------------------------------------
+# campaign integration
+# ---------------------------------------------------------------------------
+
+
+def test_campaign_reports_wave_stats_per_uarch():
+    machines = [SimMachine(SIM_UARCHES[n], TEST_ISA)
+                for n in ("sim_skl", "sim_snb")]
+    res = Campaign(instr_names=SUBSET).run(machines, TEST_ISA)
+    assert set(res.wave_stats) == {"sim_skl", "sim_snb"}
+    for ws in res.wave_stats.values():
+        assert ws["mean_wave_width"] > 1
+    assert res.mean_wave_width > 1
+
+
+class FailingMachine:
+    """SimMachine facade that blows up after a few waves — mid-run, so the
+    campaign is genuinely in flight when the failure happens."""
+
+    def __init__(self, fuse: int = 3):
+        self._m = _skl()
+        self.name = self._m.name
+        self.ports = self._m.ports
+        self.uarch = self._m.uarch
+        self._fuse = fuse
+
+    def run_batch(self, codes):
+        self._fuse -= 1
+        if self._fuse <= 0:
+            raise RuntimeError("counter MSR read failed")
+        return self._m.run_batch(codes)
+
+    def run(self, code):
+        return self._m.run(list(code))
+
+
+def test_campaign_worker_failure_surfaces_original_error_and_cancels():
+    machines = [SimMachine(SIM_UARCHES["sim_snb"], TEST_ISA),
+                FailingMachine(), SimMachine(SIM_UARCHES["sim_hsw"],
+                                             TEST_ISA)]
+    camp = Campaign()
+    with pytest.raises(RuntimeError, match="counter MSR read failed") as ei:
+        camp.run(machines, TEST_ISA)
+    # the original traceback (from inside the worker) is preserved
+    tb_funcs = []
+    tb = ei.value.__traceback__
+    while tb is not None:
+        tb_funcs.append(tb.tb_frame.f_code.co_name)
+        tb = tb.tb_next
+    assert "run_batch" in tb_funcs, \
+        f"original worker traceback lost, got frames {tb_funcs}"
+    # siblings were cancelled via the shared event, not left running: a
+    # fresh campaign on the same (healthy) machines still works
+    ok = Campaign(instr_names=["ADD_R64_R64"]).run(
+        [SimMachine(SIM_UARCHES["sim_snb"], TEST_ISA)], TEST_ISA)
+    assert "ADD_R64_R64" in ok.models["sim_snb"].instructions

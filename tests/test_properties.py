@@ -118,3 +118,38 @@ def test_simulator_port_counts_conserve_uops(seed):
         seq = independent_seq(isa[name], pool, 5)
         c = m.run(seq)
         assert c.total_uops == 5 * sum(usage.values())
+
+
+# ---------------------------------------------------------------------------
+# service protocol: textual block format round-trips
+# ---------------------------------------------------------------------------
+
+_IDENT = st.text(alphabet=st.sampled_from(
+    "ABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_"), min_size=1, max_size=12)
+
+
+@st.composite
+def _blocks(draw):
+    from repro.core.simulator import Instr
+    n = draw(st.integers(0, 6))
+    code = []
+    for _ in range(n):
+        spec = draw(_IDENT)
+        regs = draw(st.dictionaries(_IDENT, _IDENT, max_size=4))
+        hint = draw(st.sampled_from(["low", "high"]))
+        code.append(Instr(spec, regs, hint))
+    return code
+
+
+@given(code=_blocks())
+@SET
+def test_format_block_is_exact_inverse_of_parse_block(code):
+    """format_block ∘ parse_block == id on the block domain: every
+    formattable block (any spec/operand identifiers, any value hint)
+    survives a serialize→parse round trip exactly."""
+    from repro.service.protocol import format_block, parse_block
+
+    text = format_block(code)
+    assert parse_block(text) == code
+    # and the canonical text form is a fixed point of the round trip
+    assert format_block(parse_block(text)) == text

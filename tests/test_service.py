@@ -348,3 +348,26 @@ def test_block_text_roundtrip():
 def test_parse_block_rejects_unknown_variant():
     with pytest.raises(ValueError):
         parse_block("NOT_AN_INSTR op1=R0", TEST_ISA)
+
+
+def test_format_block_round_trips_randomized_blocks():
+    """Seeded analogue of the hypothesis property in test_properties.py:
+    format_block is the exact inverse of parse_block, and the canonical
+    text is a fixed point of another round trip."""
+    import random
+
+    from repro.core.simulator import Instr
+
+    rng = random.Random(42)
+    names = [s.name for s in TEST_ISA]
+    for _ in range(50):
+        code = []
+        for _ in range(rng.randint(0, 8)):
+            spec = rng.choice(names)
+            regs = {f"op{k}": f"R{rng.randrange(16)}"
+                    for k in range(rng.randint(0, 3))}
+            code.append(Instr(spec, regs,
+                              rng.choice(["low", "high"])))
+        text = format_block(code)
+        assert parse_block(text) == code
+        assert format_block(parse_block(text)) == text
