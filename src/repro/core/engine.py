@@ -145,6 +145,12 @@ class EngineStats:
     machine_runs: int = 0  # raw machine runs (2 per execution)
     batches: int = 0
     evictions: int = 0     # cache entries dropped by the LRU bound
+    # machine-side lowering-cache counters (snapshot of the batched
+    # backend's totals, refreshed after every executed wave): warm waves
+    # skip Python lowering entirely when these hit
+    lowering_hits: int = 0
+    lowering_misses: int = 0
+    lowering_evictions: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -155,16 +161,53 @@ class EngineStats:
                 "dedup_hits": self.dedup_hits, "executions": self.executions,
                 "machine_runs": self.machine_runs, "batches": self.batches,
                 "evictions": self.evictions,
+                "lowering_hits": self.lowering_hits,
+                "lowering_misses": self.lowering_misses,
+                "lowering_evictions": self.lowering_evictions,
                 "hit_rate": round(self.hit_rate, 4)}
 
 
-def machine_run_batch(machine, codes) -> list[Counters]:
+def _takes_kernel_lock(fn) -> bool:
+    """Does this ``run_batch`` speak the kernel-lock protocol?  Cached per
+    underlying function (custom machines in tests often define a bare
+    ``run_batch(codes)``)."""
+    probe = getattr(fn, "__func__", fn)
+    hit = _LOCK_SIG_CACHE.get(probe)
+    if hit is None:
+        import inspect  # noqa: PLC0415
+        try:
+            hit = "kernel_lock" in inspect.signature(probe).parameters
+        except (TypeError, ValueError):
+            hit = False
+        _LOCK_SIG_CACHE[probe] = hit
+    return hit
+
+
+_LOCK_SIG_CACHE: dict = {}
+
+
+def machine_run_batch(machine, codes, kernel_lock=None) -> list[Counters]:
     """The wave-execution protocol: machines exposing ``run_batch`` get the
     whole wave at once (vectorized backends); plain machines fall back to
-    a per-sequence scalar loop. Re-exported by ``machine.py``."""
+    a per-sequence scalar loop. Re-exported by ``machine.py``.
+
+    ``kernel_lock`` serializes GIL-bound kernel execution across callers
+    that share it: lock-aware machines hold it while a Python-stepped
+    kernel runs but only around *dispatch* for GIL-releasing device
+    kernels (host lowering/packing always overlaps); machines that
+    predate the protocol — or the scalar loop — are executed entirely
+    under the lock."""
     run_batch = getattr(machine, "run_batch", None)
     if run_batch is not None:
+        if kernel_lock is not None and not _takes_kernel_lock(run_batch):
+            with kernel_lock:
+                return run_batch(codes)
+        if kernel_lock is not None:
+            return run_batch(codes, kernel_lock=kernel_lock)
         return run_batch(codes)
+    if kernel_lock is not None:
+        with kernel_lock:
+            return [machine.run(list(c)) for c in codes]
     return [machine.run(list(c)) for c in codes]
 
 
@@ -188,11 +231,14 @@ class MeasurementEngine:
         return self.submit([exp])[0]
 
     # -- batched wave ------------------------------------------------------
-    def submit(self, experiments) -> list[Counters]:
+    def submit(self, experiments, kernel_lock=None) -> list[Counters]:
         """Execute a wave of independent Experiments; identical requests are
         deduplicated and cached results reused; the unique miss-set runs as
         one batch through the machine's ``run_batch`` protocol. Returns one
-        Counters per submitted Experiment, in submission order."""
+        Counters per submitted Experiment, in submission order.
+        ``kernel_lock`` serializes kernel execution across engines sharing
+        it (host lowering/packing stays concurrent, see
+        :func:`machine_run_batch`)."""
         experiments = list(experiments)
         uarch = self.machine.name
         keys = [e.cache_key(uarch) for e in experiments]
@@ -200,7 +246,7 @@ class MeasurementEngine:
             self.stats.requests += len(experiments)
             self.stats.batches += 1
             if not self.enabled:
-                return self._execute_wave(experiments)
+                return self._execute_wave(experiments, kernel_lock)
             todo: dict[str, Experiment] = {}
             resolved: dict[str, Counters] = {}
             for e, k in zip(experiments, keys):
@@ -212,7 +258,9 @@ class MeasurementEngine:
                 else:
                     todo[k] = e
             if todo:
-                for k, c in zip(todo, self._execute_wave(todo.values())):
+                for k, c in zip(todo,
+                                self._execute_wave(todo.values(),
+                                                   kernel_lock)):
                     resolved[k] = c
                     self._store(k, c)
             return [self._copy(resolved[k]) for k in keys]
@@ -225,15 +273,20 @@ class MeasurementEngine:
                 self.stats.evictions += 1
 
     # -- Algorithm 2: overhead-cancelling differenced runs, one wave -------
-    def _execute_wave(self, experiments) -> list[Counters]:
+    def _execute_wave(self, experiments, kernel_lock=None) -> list[Counters]:
         experiments = list(experiments)
         codes: list = []
         for e in experiments:
             codes.append(list(e.code) * e.n_small)
             codes.append(list(e.code) * e.n_large)
-        raw = machine_run_batch(self.machine, codes)
+        raw = machine_run_batch(self.machine, codes, kernel_lock)
         self.stats.machine_runs += len(codes)
         self.stats.executions += len(experiments)
+        ls = getattr(self.machine, "lowering_stats", None)
+        if ls:   # snapshot the backend's lowering-cache totals
+            self.stats.lowering_hits = ls["hits"]
+            self.stats.lowering_misses = ls["misses"]
+            self.stats.lowering_evictions = ls["evictions"]
         out = []
         for i, e in enumerate(experiments):
             c1, c2 = raw[2 * i], raw[2 * i + 1]

@@ -17,7 +17,13 @@ list[Counters]`` to execute a whole wave of instruction sequences at once
 (the compiled array backend in ``core/batch_sim.py`` — the default path
 behind ``SimMachine``), and machines without it are driven by a scalar
 per-sequence loop. ``MeasurementEngine.submit`` routes every deduplicated
-miss-set through this protocol.
+miss-set through this protocol. Lock-aware machines additionally accept
+``run_batch(codes, kernel_lock=...)``: the lock serializes GIL-bound
+kernel execution (numpy backend, scalar fallback) while host
+lowering/packing overlaps other workers' kernels; device backends hold
+it only around dispatch (their kernels release the GIL).
+``machine_run_batch`` bridges machines that predate the parameter by
+running them entirely under the lock.
 """
 from __future__ import annotations
 

@@ -162,12 +162,18 @@ class WaveScheduler:
     running plan's phase, wave-execution time proportionally to the number
     of experiments each phase contributed.
 
-    ``execute_lock`` (a ``threading.Lock``) serializes *wave execution*
-    across schedulers that share it: a fused super-wave is one large array
-    program that already saturates the interpreter, so two campaign
-    workers' kernels interleaving under the GIL just thrash each other
-    (measured ~8x CPU inflation); with the shared lock, plan stepping
-    stays concurrent but one wave runs at a time per process.
+    ``execute_lock`` (a ``threading.Lock``) travels down to the machine's
+    batched backend as a kernel lock (see ``machine_run_batch``) and
+    serializes the *GIL-bound* kernels across schedulers that share it: a
+    fused numpy super-wave is one large Python-stepped array program that
+    already saturates the interpreter, so two campaign workers' kernels
+    interleaving under the GIL just thrash each other (measured ~8x CPU
+    inflation).  Host lowering and wave packing always run outside the
+    lock, and plan stepping stays concurrent throughout.  Device backends
+    (jax/pallas) hold the lock only around kernel *dispatch*: their
+    compiled kernels release the GIL and execute on the machine's device
+    pool, so workers' device kernels may overlap — that is compute on
+    real cores, not GIL thrash.
     """
 
     def __init__(self, machine_or_engine, *, cancel=None, execute_lock=None):
@@ -263,11 +269,11 @@ class WaveScheduler:
         for _, batch in blocked:
             wave.extend(batch)
         t0 = time.perf_counter()
-        if self.execute_lock is not None:
-            with self.execute_lock:
-                counters = self.engine.submit(wave)
-        else:
-            counters = self.engine.submit(wave)
+        # the shared lock travels down to the machine as a *kernel* lock:
+        # only kernel execution serializes across schedulers; this
+        # scheduler's host lowering/packing overlaps a sibling's kernel
+        # (double-buffered async dispatch in the batched backend)
+        counters = self.engine.submit(wave, kernel_lock=self.execute_lock)
         dt = time.perf_counter() - t0
         self.stats.record(len(wave))
         off = 0

@@ -74,15 +74,25 @@ def _implicit_reg(opname: str, otype: str) -> str:
 
 
 class SimMachine:
-    """The measurable black box."""
+    """The measurable black box.
+
+    ``backend`` selects the batched wave-execution kernel (``numpy``,
+    ``jax``, or ``pallas``; default: the ``REPRO_SIM_BACKEND`` environment
+    variable, else ``numpy``) — results are bit-identical on every
+    backend.  ``min_lanes`` is the thin-chunk scalar-oracle crossover
+    forwarded to :class:`~repro.core.batch_sim.BatchSimMachine` (default:
+    the measured crossover, see ``bench_batch_sim``)."""
 
     counters_available = True
 
-    def __init__(self, uarch: UArch, isa: ISA):
+    def __init__(self, uarch: UArch, isa: ISA, backend: str | None = None,
+                 min_lanes: int | None = None):
         self.uarch = uarch
         self.isa = isa
         self.name = uarch.name
         self.ports = uarch.ports
+        self.backend = backend
+        self.min_lanes = min_lanes
         self._batch = None        # lazy BatchSimMachine (False: unavailable)
         self._table_index = None  # shared UopTableIndex (set by Campaign)
 
@@ -94,28 +104,69 @@ class SimMachine:
         self._table_index = index
         self._batch = None
 
-    def run_batch(self, codes) -> list:
+    @property
+    def lowering_stats(self) -> dict:
+        """The batched backend's lowering-cache counters (empty until the
+        first wave builds the backend); surfaced through ``engine_stats``."""
+        return self._batch.lowering_stats if self._batch else {}
+
+    def device_stats(self) -> dict:
+        """The batched backend's device-kernel telemetry (compile counts
+        per shape bucket — the CI recompile probe reads this)."""
+        return self._batch.device_stats() if self._batch else {}
+
+    def run_batch(self, codes, kernel_lock=None) -> list:
         """Execute a wave of sequences through the compiled batched
         backend (bit-identical to per-sequence :meth:`run`); falls back
         to the scalar loop when the array backend is unavailable.
 
-        Degenerate waves (fewer than 4 sequences) run the scalar loop
-        directly: the array program's fixed per-step cost exceeds the
-        interpreter loop it replaces (bit-identical either way); the
-        batched backend additionally routes thin padded chunks to the
-        scalar oracle (see ``BatchSimMachine.min_lanes``)."""
+        Degenerate waves (fewer than ``min(4, min_lanes)`` sequences) run
+        the scalar loop directly without building the batched backend:
+        the array program's fixed per-step cost exceeds the interpreter
+        loop it replaces (bit-identical either way); the batched backend
+        additionally routes thin padded chunks to the scalar oracle (see
+        ``BatchSimMachine.min_lanes`` — ``min_lanes=1`` forces every wave
+        through the kernel).  ``kernel_lock`` serializes GIL-bound kernel
+        execution — host lowering/packing stays concurrent across
+        schedulers sharing the lock, and GIL-releasing device kernels
+        hold it only around dispatch (see
+        ``BatchSimMachine.run_batch``)."""
         codes = list(codes)
-        if len(codes) < 4:
+        degenerate = 4 if self.min_lanes is None else \
+            min(4, max(self.min_lanes, 1))
+        if len(codes) < degenerate:
+            if kernel_lock is not None:
+                with kernel_lock:
+                    return [self.run(list(c)) for c in codes]
             return [self.run(list(c)) for c in codes]
         if self._batch is None:
             try:
-                from repro.core.batch_sim import BatchSimMachine  # noqa: PLC0415
-                self._batch = BatchSimMachine(
-                    self.uarch, self.isa, table_index=self._table_index)
+                from repro.core.batch_sim import (  # noqa: PLC0415
+                    DEFAULT_MIN_LANES, BatchSimMachine)
+                import os  # noqa: PLC0415
+                backend = self.backend or os.environ.get(
+                    "REPRO_SIM_BACKEND", "numpy")
+                min_lanes = (DEFAULT_MIN_LANES if self.min_lanes is None
+                             else self.min_lanes)
+                try:
+                    self._batch = BatchSimMachine(
+                        self.uarch, self.isa, backend=backend,
+                        table_index=self._table_index, min_lanes=min_lanes)
+                except RuntimeError:   # jax backend requested, jax missing
+                    import warnings  # noqa: PLC0415
+                    warnings.warn(f"sim backend {backend!r} unavailable "
+                                  "(jax not importable); falling back to "
+                                  "numpy", stacklevel=2)
+                    self._batch = BatchSimMachine(
+                        self.uarch, self.isa, backend="numpy",
+                        table_index=self._table_index, min_lanes=min_lanes)
             except ImportError:   # no numpy: scalar fallback
                 self._batch = False
         if self._batch:
-            return self._batch.run_batch(codes)
+            return self._batch.run_batch(codes, kernel_lock=kernel_lock)
+        if kernel_lock is not None:
+            with kernel_lock:
+                return [self.run(list(c)) for c in codes]
         return [self.run(list(c)) for c in codes]
 
     # ------------------------------------------------------------------

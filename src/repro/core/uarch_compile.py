@@ -144,8 +144,21 @@ class CompiledUArch:
     reads: np.ndarray = None       # int16[n_rows, max_reads] slot-coded
     writes: np.ndarray = None      # int16[n_rows, max_writes]
     mask_table: np.ndarray = None  # bool[n_masks, n_ports]
+    _dev_lut: object = field(default=None, repr=False, compare=False)
 
     # ------------------------------------------------------------------
+    def device_mask_table(self):
+        """The μop port-mask LUT as a device-resident array (memoized).
+
+        The batched device kernels index this table every step; keeping it
+        resident means it crosses host→device once per compiled uarch, not
+        once per executed wave."""
+        if self._dev_lut is None:
+            import jax  # noqa: PLC0415 - device path only
+
+            self._dev_lut = jax.device_put(self.mask_table)
+        return self._dev_lut
+
     def decode_slot(self, instr_i: int, slot: int) -> str:
         """Slot code -> name (operand / temp / raw register)."""
         if slot < TEMP_BASE:

@@ -71,18 +71,23 @@ class BatchPredictor:
     def predict(self, code) -> Prediction:
         return self.predict_batch([code])[0]
 
-    def simulate_batch(self, blocks) -> list[float]:
+    def simulate_batch(self, blocks, kernel_lock=None) -> list[float]:
         """Measured steady-state cycles per block iteration, for a whole
         wave of blocks at once (Algorithm-2 differencing on the attached
         machine; the engine dedups the wave and executes the miss-set
-        through the machine's batched backend)."""
+        through the machine's batched backend — device-resident when the
+        machine's backend is ``jax``/``pallas``, with warm waves skipping
+        lowering via the machine's lowering cache).  ``kernel_lock``
+        serializes kernel execution against other engines sharing the
+        lock; host lowering/packing stays concurrent."""
         if self.machine is None:
             raise ValueError("simulate-backed mode needs a machine "
                              "(BatchPredictor(..., machine=...))")
         from repro.core.engine import Experiment, as_engine  # noqa: PLC0415
 
         engine = as_engine(self.machine)
-        res = engine.submit([Experiment.of(b) for b in blocks])
+        res = engine.submit([Experiment.of(b) for b in blocks],
+                            kernel_lock=kernel_lock)
         return [c.cycles for c in res]
 
     def predict_batch(self, blocks, on_error: str = "raise") -> list:

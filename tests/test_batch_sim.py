@@ -138,13 +138,21 @@ def test_ragged_wave_lengths():
     assert_wave_matches(SIM_SKL, TEST_ISA, codes)
 
 
-def test_jax_backend_matches_when_available():
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_device_backends_match_when_available(backend):
     pytest.importorskip("jax")
     body = independent_seq(TEST_ISA["ADD_R64_R64"], RegPool(), 3)
     codes = [body * 4, body * 11,
              [Instr("DIV_R64", {"op1": "R0", "op2": "R1"}, "high")] * 6,
              []]
-    assert_wave_matches(SIM_SKL, TEST_ISA, codes, backend="jax")
+    assert_wave_matches(SIM_SKL, TEST_ISA, codes, backend=backend)
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_device_backends_on_interesting_wave(backend):
+    pytest.importorskip("jax")
+    assert_wave_matches(SIM_SKL, TEST_ISA, _interesting_wave(TEST_ISA),
+                        backend=backend)
 
 
 def test_unknown_instruction_raises_keyerror_like_scalar():
@@ -173,6 +181,292 @@ def test_body_period_detection():
     assert _body_period([id(x) for x in a * 40]) == 3
     assert _body_period([id(x) for x in a]) == 3  # distinct objects
     assert _body_period([id(a[0])] * 7) == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite: dispatch tie-break equivalence at port-count boundaries
+# ---------------------------------------------------------------------------
+
+
+def _tie_wave(ports, isa_ports=None):
+    """A wave engineered so several ports repeatedly tie on *both*
+    dispatch time and cumulative μop count: independent single-μop
+    instructions whose port mask spans many ports, plus a narrower mask
+    sharing a boundary port, issued wider than the port set so counts
+    wrap around and re-equalize."""
+    from repro.core.isa import GPR, ISA, InstrSpec, op
+    wide_mask = frozenset(ports)
+    narrow_mask = frozenset(list(sorted(ports))[:2])
+    b = {"TIEW": beh(uop(wide_mask, ("op2",), ("op1",))),
+         "TIEN": beh(uop(narrow_mask, ("op2",), ("op1",)))}
+    ua = UArch("sim_tie", tuple(ports), 8, b, overhead_cycles=0)
+    isa = ISA([InstrSpec("TIEW", "TIEW",
+                         (op("op1", GPR, "w"), op("op2", GPR, "r"))),
+               InstrSpec("TIEN", "TIEN",
+                         (op("op1", GPR, "w"), op("op2", GPR, "r")))])
+    codes = []
+    for reps in (1, 3, 11):
+        codes.append([Instr("TIEW", {"op1": f"R{i}", "op2": f"R{i + 32}"})
+                      for i in range(3 * len(ports))] * reps)
+        codes.append([Instr(("TIEW", "TIEN")[i % 2],
+                            {"op1": f"R{i}", "op2": f"R{i + 40}"})
+                      for i in range(2 * len(ports))] * reps)
+    return ua, isa, codes
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
+def test_tie_break_equivalence_at_port_count_boundaries(backend):
+    """The numpy kernel breaks dispatch ties with one packed
+    (time, count, port) argmin key; the device kernels use a two-pass min.
+    On waves where several ports tie on both time and count, every backend
+    must pick the same port as the scalar oracle — checked on the widest
+    SIM_UARCHES port set and on an 18-port machine (so the port axis
+    exceeds 16 and the packed key's field widths are exercised)."""
+    if backend != "numpy":
+        pytest.importorskip("jax")
+    widest = max(SIM_UARCHES.values(), key=lambda u: len(u.ports))
+    ua, isa, codes = _tie_wave(sorted(widest.ports))
+    assert_wave_matches(ua, isa, codes, backend=backend)
+    ua18, isa18, codes18 = _tie_wave([f"p{i:02d}" for i in range(18)])
+    assert_wave_matches(ua18, isa18, codes18, backend=backend)
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_backends_agree_on_wide_port_machine(backend):
+    pytest.importorskip("jax")
+    from repro.core.isa import GPR, ISA, InstrSpec, op
+    ports = tuple(f"p{i:02d}" for i in range(18))
+    b = {"WADD": beh(uop(frozenset(ports), ("op2",), ("op1",)))}
+    ua = UArch("sim_wide", ports, 8, b, overhead_cycles=0)
+    isa = ISA([InstrSpec("WADD", "WADD",
+                         (op("op1", GPR, "w"), op("op2", GPR, "r")))])
+    codes = [[Instr("WADD", {"op1": f"R{i}", "op2": f"R{i + 20}"})
+              for i in range(20)] * reps for reps in (1, 5, 11)]
+    assert_wave_matches(ua, isa, codes, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# satellite: lowering cache (hits/misses in engine_stats, eviction bound,
+# bit-identical warm re-runs)
+# ---------------------------------------------------------------------------
+
+
+def _random_codes(seed, n_bodies=6):
+    rng = random.Random(seed)
+    names = ["ADD_R64_R64", "IMUL_R64_R64", "SHLD_R64_R64_I8",
+             "MOV_R64_M64", "ADC_R64_R64", "DIV_R64"]
+    codes = []
+    for _ in range(n_bodies):
+        body = independent_seq(TEST_ISA[rng.choice(names)], RegPool(),
+                               rng.randint(2, 6))
+        codes.append(body * 10)
+        codes.append(body * 110)
+    return codes
+
+
+def test_lowering_cache_warm_wave_is_bit_identical():
+    m = BatchSimMachine(SIM_SKL, TEST_ISA, min_lanes=1)
+    rng = random.Random(7)
+    names = ["ADD_R64_R64", "IMUL_R64_R64", "SHLD_R64_R64_I8",
+             "MOV_R64_M64", "ADC_R64_R64", "DIV_R64"]
+    bodies = [independent_seq(TEST_ISA[rng.choice(names)], RegPool(),
+                              rng.randint(2, 6)) for _ in range(6)]
+    codes = [b * n for b in bodies for n in (10, 110)]
+    cold = m.run_batch(codes)
+    assert m.lowering_stats["misses"] > 0
+    misses0 = m.lowering_stats["misses"]
+    # fresh Instr objects (a new wave of content-identical Experiments,
+    # unrolled body * n the way the engine does): lowering is skipped
+    bodies2 = [[Instr(i.spec, dict(i.regs), i.value_hint) for i in b]
+               for b in bodies]
+    codes2 = [b * n for b in bodies2 for n in (10, 110)]
+    warm = m.run_batch(codes2)
+    assert m.lowering_stats["misses"] == misses0
+    assert m.lowering_stats["hits"] >= misses0
+    for a, b in zip(cold, warm):
+        assert a.cycles == b.cycles and a.port_uops == b.port_uops
+
+
+def test_lowering_cache_hits_when_engine_misses_on_params():
+    """The ISSUE scenario: two Experiments share a body but differ in
+    Algorithm-2 params — the engine cache misses (different key) but the
+    machine's lowering cache hits, and the counters surface through
+    engine_stats."""
+    from repro.core.engine import Experiment, MeasurementEngine
+
+    m = SimMachine(SIM_SKL, TEST_ISA, min_lanes=1)
+    eng = MeasurementEngine(m)
+    bodies = [tuple(independent_seq(TEST_ISA[n], RegPool(), 4))
+              for n in ("IMUL_R64_R64", "ADC_R64_R64", "SHLD_R64_R64_I8")]
+    eng.submit([Experiment.of(b) for b in bodies])
+    s = eng.stats.as_dict()
+    assert s["lowering_misses"] > 0
+    # same bodies, different unroll params: engine miss, lowering hit on
+    # the already-lowered n=110 cut (n=30 is a new prefix cut)
+    eng.submit([Experiment.of(b, n_small=30, n_large=110)
+                for b in bodies])
+    s2 = eng.stats.as_dict()
+    assert s2["executions"] == 6          # engine cache missed on params
+    assert s2["lowering_hits"] > s["lowering_hits"]
+    assert s2["lowering_misses"] <= s["lowering_misses"] + len(bodies)
+
+
+def test_lowering_cache_eviction_bound():
+    m = BatchSimMachine(SIM_SKL, TEST_ISA, min_lanes=1,
+                        lower_cache_entries=3)
+    codes = _random_codes(11, n_bodies=5)   # 10 (body, cut) entries
+    ref = [SimMachine(SIM_SKL, TEST_ISA).run(list(c)) for c in codes]
+    got = m.run_batch(codes)
+    assert len(m._lower_cache) <= 3
+    assert m.lowering_stats["evictions"] > 0
+    for a, b in zip(ref, got):
+        assert a.cycles == b.cycles and a.port_uops == b.port_uops
+    # a second pass still returns correct results (some entries evicted)
+    got2 = m.run_batch(codes)
+    for a, b in zip(ref, got2):
+        assert a.cycles == b.cycles and a.port_uops == b.port_uops
+
+
+# ---------------------------------------------------------------------------
+# satellite: min_lanes is a constructor parameter on both machines
+# ---------------------------------------------------------------------------
+
+
+def test_min_lanes_constructor_parameter():
+    codes = _random_codes(3, n_bodies=2)
+    ref = [SimMachine(SIM_SKL, TEST_ISA).run(list(c)) for c in codes]
+    for m in (SimMachine(SIM_SKL, TEST_ISA, min_lanes=1),
+              SimMachine(SIM_SKL, TEST_ISA, min_lanes=10 ** 6),
+              BatchSimMachine(SIM_SKL, TEST_ISA, min_lanes=1),
+              BatchSimMachine(SIM_SKL, TEST_ISA, min_lanes=10 ** 6)):
+        got = m.run_batch(codes)
+        for a, b in zip(ref, got):
+            assert a.cycles == b.cycles and a.port_uops == b.port_uops
+    forced = BatchSimMachine(SIM_SKL, TEST_ISA, min_lanes=10 ** 6)
+    forced.run_batch(codes)
+    assert forced._scalar is not None       # everything went scalar
+    kerneled = BatchSimMachine(SIM_SKL, TEST_ISA, min_lanes=1)
+    kerneled.run_batch(codes)
+    assert kerneled._scalar is None         # everything took the kernel
+    # SimMachine forwards its min_lanes to the lazily-built backend
+    sm = SimMachine(SIM_SKL, TEST_ISA, min_lanes=5)
+    sm.run_batch(codes)
+    assert sm._batch.min_lanes == 5
+
+
+# ---------------------------------------------------------------------------
+# satellite/tentpole: device-kernel compile accounting (one per bucket)
+# ---------------------------------------------------------------------------
+
+
+def test_jax_kernel_compiles_at_most_once_per_bucket():
+    pytest.importorskip("jax")
+    codes = _random_codes(19)
+    m = BatchSimMachine(SIM_SKL, TEST_ISA, backend="jax", min_lanes=1)
+    m.run_batch(codes)
+    st = m.device_stats()
+    assert st["compiles"] <= len(st["buckets"])
+    compiles0 = st["compiles"]
+    calls0 = st["kernel_calls"]
+    m.run_batch(codes)                       # warm: same shape buckets
+    st2 = m.device_stats()
+    assert st2["compiles"] == compiles0, "warm wave recompiled a kernel"
+    assert st2["kernel_calls"] > calls0
+    # a fresh machine over the same shapes shares the module-wide cache
+    m2 = BatchSimMachine(SIM_SKL, TEST_ISA, backend="jax", min_lanes=1)
+    m2.run_batch(codes)
+    assert m2.device_stats()["compiles"] == 0
+
+
+def test_backend_env_selection(monkeypatch):
+    pytest.importorskip("jax")
+    monkeypatch.setenv("REPRO_SIM_BACKEND", "jax")
+    m = SimMachine(SIM_SKL, TEST_ISA)
+    codes = _random_codes(23, n_bodies=3)
+    got = m.run_batch(codes)
+    assert m._batch.backend == "jax"
+    ref = [SimMachine(SIM_SKL, TEST_ISA, backend="numpy").run(list(c))
+           for c in codes]
+    for a, b in zip(ref, got):
+        assert a.cycles == b.cycles and a.port_uops == b.port_uops
+
+
+# ---------------------------------------------------------------------------
+# tentpole: the kernel lock serializes kernels, not host prep
+# ---------------------------------------------------------------------------
+
+
+class _CountingLock:
+    def __init__(self):
+        import threading
+        self._lock = threading.Lock()
+        self.entries = 0
+
+    def __enter__(self):
+        self._lock.acquire()
+        self.entries += 1
+        return self
+
+    def __exit__(self, *exc):
+        self._lock.release()
+        return False
+
+
+def test_kernel_lock_reaches_the_machine():
+    from repro.core.engine import Experiment, MeasurementEngine
+
+    m = SimMachine(SIM_SKL, TEST_ISA, min_lanes=1)
+    eng = MeasurementEngine(m)
+    lock = _CountingLock()
+    exps = [Experiment.of(independent_seq(TEST_ISA[n], RegPool(), 3))
+            for n in ("ADD_R64_R64", "IMUL_R64_R64", "LEA_R64",
+                      "ADC_R64_R64")]
+    res = eng.submit(exps, kernel_lock=lock)
+    assert lock.entries > 0
+    ref = eng.submit(exps)   # cached now; also: results sane without lock
+    for a, b in zip(res, ref):
+        assert a.cycles == b.cycles and a.port_uops == b.port_uops
+
+
+def test_scheduler_execute_lock_travels_as_kernel_lock():
+    from repro.core.engine import Experiment, MeasurementEngine
+    from repro.core.plan import WaveScheduler
+
+    m = SimMachine(SIM_SKL, TEST_ISA, min_lanes=1)
+    lock = _CountingLock()
+    sched = WaveScheduler(MeasurementEngine(m), execute_lock=lock)
+
+    def plan():
+        c = yield [Experiment.of(independent_seq(
+            TEST_ISA["ADD_R64_R64"], RegPool(), 4))]
+        return c[0].cycles
+
+    out = sched.run([plan(), plan()])
+    assert out[0] == out[1] > 0
+    assert lock.entries > 0
+
+
+def test_legacy_run_batch_without_kernel_lock_param_still_works():
+    """Machines predating the kernel-lock protocol run entirely under the
+    lock (machine_run_batch introspects the signature)."""
+    from repro.core.engine import machine_run_batch
+
+    class OldMachine:
+        name = "sim_skl"
+
+        def __init__(self):
+            self._m = SimMachine(SIM_SKL, TEST_ISA)
+
+        def run_batch(self, codes):
+            return self._m.run_batch(codes)
+
+    lock = _CountingLock()
+    codes = _random_codes(5, n_bodies=2)
+    got = machine_run_batch(OldMachine(), codes, kernel_lock=lock)
+    assert lock.entries == 1
+    ref = [SimMachine(SIM_SKL, TEST_ISA).run(list(c)) for c in codes]
+    for a, b in zip(ref, got):
+        assert a.cycles == b.cycles and a.port_uops == b.port_uops
 
 
 # ---------------------------------------------------------------------------
@@ -301,6 +595,131 @@ def test_engine_submits_waves_through_run_batch():
             for n in ("ADD_R64_R64", "IMUL_R64_R64", "LEA_R64")]
     eng.submit(exps + exps)   # duplicates dedup away
     assert rec.waves == [6]   # 3 unique experiments x (n_small, n_large)
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_sharded_chunk_with_uniform_lengths(backend):
+    """Regression: two lane shards of one chunk map to the SAME shape
+    bucket when every sequence has the same length — the shards must not
+    share a packing-buffer slot (the second pack would overwrite the
+    first's inputs before either kernel dispatches)."""
+    pytest.importorskip("jax")
+    from repro.core.batch_sim import _DeviceExec
+    rng = random.Random(41)
+    lanes = 2 * _DeviceExec._SHARD_MIN_LANES
+    names = ["ADD_R64_R64", "IMUL_R64_R64", "ADC_R64_R64", "MULPS_X_X"]
+    codes = [independent_seq(TEST_ISA[rng.choice(names)], RegPool(), 4) * 12
+             for _ in range(lanes)]
+    assert_wave_matches(SIM_SKL, TEST_ISA, codes, backend=backend)
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_all_zero_uop_shard(backend):
+    """Regression: a lane shard whose programs all lower to zero μops
+    (zero-idiom bodies) must fill in overhead-only Counters instead of
+    crashing extraction — the all-empty guard has to run per shard, not
+    just per chunk."""
+    pytest.importorskip("jax")
+    from repro.core.batch_sim import _DeviceExec
+    lanes = _DeviceExec._SHARD_MIN_LANES
+    adds = [[Instr("ADD_R64_R64", {"op1": f"R{i % 8}",
+                                   "op2": f"R{i % 8 + 8}"})] * 8
+            for i in range(lanes)]
+    zeros = [[Instr("XOR_R64_R64", {"op1": f"R{i % 8}",
+                                    "op2": f"R{i % 8}"})] * 8
+             for i in range(lanes)]
+    assert_wave_matches(SIM_SKL, TEST_ISA, adds + zeros, backend=backend)
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_buffer_reuse_with_narrower_read_width(backend):
+    """Regression: a reused device buffer whose previous occupant had a
+    wider per-μop read width (max_r) must not leak stale producer columns
+    into a later lane with a narrower width at the same rows — the
+    kernels read ALL R producer columns of every valid row."""
+    pytest.importorskip("jax")
+    m = BatchSimMachine(SIM_SKL, TEST_ISA, backend=backend, min_lanes=1)
+    scalar = SimMachine(SIM_SKL, TEST_ISA)
+    # wave A: partial-register-stall pairs — the ADD's second producer
+    # column carries a nonzero stall *delta*, which the kernels add
+    # unconditionally (not gated on producer >= 0)
+    wave_a = [[Instr("SETC_R8", {"op1": f"R{i + 1}"}),
+               Instr("ADD_R64_R64",
+                     {"op1": f"R{i + 8}", "op2": f"R{i + 1}"})] * 24
+              for i in range(6)]   # 48 rows — BSWAP below is 2 μops/instr
+    # wave B: identical (S, E, R) bucket — one two-read lane keeps the R
+    # bucket at 2 — but the other lanes are fully independent single-read
+    # BSWAPs (max_r 1) whose rows overlap wave A's stale delta column; a
+    # leaked stall delta inflates their ready times above the real
+    # issue-limited critical path
+    wave_b = wave_a[:1] + \
+             [[Instr("BSWAP_R64", {"op1": f"Q{lane}_{j}"})
+               for j in range(24)] for lane in range(5)]
+    for wave in (wave_a, wave_b, wave_b):   # later passes reuse slots
+        got = m.run_batch(wave)
+        for c, code in zip(got, wave):
+            ref = scalar.run(list(code))
+            assert c.cycles == ref.cycles and c.port_uops == ref.port_uops
+
+
+def test_simmachine_degenerate_wave_respects_min_lanes():
+    body = independent_seq(TEST_ISA["ADD_R64_R64"], RegPool(), 3)
+    m = SimMachine(SIM_SKL, TEST_ISA, min_lanes=1)
+    got = m.run_batch([body * 10, body * 110])   # 2 codes: < 4, >= min
+    assert m._batch is not None                   # kernel path was taken
+    ref = SimMachine(SIM_SKL, TEST_ISA)
+    for c, code in zip(got, (body * 10, body * 110)):
+        r = ref.run(list(code))
+        assert c.cycles == r.cycles and c.port_uops == r.port_uops
+    plain = SimMachine(SIM_SKL, TEST_ISA)
+    plain.run_batch([body * 10, body * 110])
+    assert plain._batch is None                   # default still scalar
+
+
+def test_characterize_xml_identical_across_backends():
+    """End-to-end: a characterization driven through the device backends
+    exports byte-identical model XML to the numpy backend (the whole
+    pipeline — scheduler fusion, engine cache, lowering cache, bucketed
+    kernels, pipelined dispatch — preserves every measured number)."""
+    pytest.importorskip("jax")
+    from repro.core import model_io
+    from repro.core.characterize import characterize
+    from repro.core.engine import MeasurementEngine
+
+    names = ["ADD_R64_R64", "MOVQ2DQ_X_X", "DIV_R64", "SHLD_R64_R64_I8",
+             "MUL_R64", "AESDEC_X_X"]
+    ref = characterize(
+        MeasurementEngine(SimMachine(SIM_SKL, TEST_ISA, backend="numpy")),
+        TEST_ISA, names)
+    ref_xml = model_io.to_xml(ref, TEST_ISA)
+    for backend in ("jax", "pallas"):
+        m = SimMachine(SIM_SKL, TEST_ISA, backend=backend)
+        model = characterize(MeasurementEngine(m), TEST_ISA, names)
+        assert model_io.to_xml(model, TEST_ISA) == ref_xml, backend
+        assert m.lowering_stats["misses"] > 0
+        assert m.device_stats()["compiles"] <= \
+            len(m.device_stats()["buckets"])
+
+
+def test_campaign_runs_on_device_backend(monkeypatch):
+    """A threaded multi-uarch campaign with the jax wave-execution backend
+    (selected via REPRO_SIM_BACKEND): the shared execute lock rides down
+    to the kernels, host prep overlaps, results match the numpy campaign."""
+    pytest.importorskip("jax")
+    names = ["ADD_R64_R64", "MUL_R64", "ADC_R64_R64"]
+    ref = Campaign(instr_names=names).run(
+        [SimMachine(ua, TEST_ISA) for ua in SIM_UARCHES.values()],
+        TEST_ISA)
+    monkeypatch.setenv("REPRO_SIM_BACKEND", "jax")
+    res = Campaign(instr_names=names).run(
+        [SimMachine(ua, TEST_ISA) for ua in SIM_UARCHES.values()],
+        TEST_ISA)
+    assert set(res.models) == set(SIM_UARCHES)
+    for name, model in res.models.items():
+        for n in names:
+            assert model[n].port_usage.usage == \
+                ref.models[name][n].port_usage.usage
+            assert model[n].uops == ref.models[name][n].uops
 
 
 def test_legacy_measure_results_unchanged_by_batch_default():
