@@ -261,6 +261,10 @@ class BatchSimMachine:
         self._lower_max = lower_cache_entries
         self.lowering_stats = {"hits": 0, "misses": 0, "evictions": 0}
         self._device = None             # lazy _DeviceExec (jax/pallas)
+        # guards the machine's shared mutable host state (lowering-cache
+        # LRU, recipe memo, lazy device/scalar init) across concurrent
+        # run_batch callers; slot leasing has its own lock in _DeviceExec
+        self._host_lock = threading.Lock()
 
     # ------------------------------------------------------------------
     def run(self, code) -> Counters:
@@ -285,7 +289,13 @@ class BatchSimMachine:
         device backends hold it only around kernel *dispatch*: their
         compiled kernels release the GIL and are scheduled by the
         machine's device pool, so serializing their execution would not
-        prevent thrash, only forfeit overlap (see ``WaveScheduler``)."""
+        prevent thrash, only forfeit overlap (see ``WaveScheduler``).
+
+        Concurrent ``run_batch`` calls on one machine instance are safe —
+        the lowering cache/recipe memo and the device buffer-slot leasing
+        are mutex-guarded — but they serialize on host lowering; the
+        intended topology is one caller per machine (campaign workers own
+        distinct machines and overlap only *across* machines)."""
         codes = [list(c) for c in codes]
         out: list = [None] * len(codes)
         # chunk by similar length so short sequences don't pay for the
@@ -306,9 +316,11 @@ class BatchSimMachine:
         batched = [c for c in chunks if len(c) >= self.min_lanes]
         thin = [i for c in chunks if len(c) < self.min_lanes for i in c]
         if thin:
-            if self._scalar is None:
-                from repro.core.simulator import SimMachine  # noqa: PLC0415
-                self._scalar = SimMachine(self.uarch, self.isa)
+            with self._host_lock:
+                if self._scalar is None:
+                    from repro.core.simulator import (  # noqa: PLC0415
+                        SimMachine)
+                    self._scalar = SimMachine(self.uarch, self.isa)
             if kernel_lock is not None:
                 with kernel_lock:
                     for i in thin:
@@ -343,7 +355,13 @@ class BatchSimMachine:
         content-addressed lowering cache.  Sequences sharing one body
         (Algorithm 2 submits the same body at two unroll counts) lower the
         longest *missing* count once; shorter unrollings are prefix views
-        of the same tensors (causality)."""
+        of the same tensors (causality).  Holds the machine's host lock:
+        the cache LRU (pop/reinsert/evict) and the recipe memo are shared
+        mutable state across concurrent ``run_batch`` callers."""
+        with self._host_lock:
+            return self._lower_wave_locked(codes, batched)
+
+    def _lower_wave_locked(self, codes, batched) -> dict:
         by_id: dict = {}
         groups: dict = {}
         for c in batched:
@@ -671,7 +689,8 @@ class BatchSimMachine:
             prod = np.concatenate([x[5] for x in parts])
             delta = np.concatenate([x[6] for x in parts])
         # cached tensors are int32: every simulated quantity fits (cycles,
-        # rows, counts < 2^31) and the device kernels run int32 natively
+        # rows, counts < 2^31 - 1 — the device kernels reserve INT32_MAX
+        # as the disallowed-port dispatch sentinel) and run int32 natively
         issue = issue.astype(np.int32)
         mask = mask.astype(np.int32)
         lat = lat.astype(np.int32)
@@ -876,53 +895,80 @@ class BatchSimMachine:
         into per-core lane shards whose kernels run concurrently on the
         device pool (the kernels release the GIL), and chunk k+1 is packed
         on the host while chunk k executes (double-buffered bucket slots —
-        a slot is only reused once its in-flight kernel has finished,
-        since host buffers may be aliased zero-copy onto the device).
+        a slot is only reused once its chunk's results have been
+        *extracted*, not merely once its kernel finished: host buffers may
+        be aliased zero-copy onto the device, and extraction still reads
+        the slot's ``vis`` plane through the :class:`_ChunkPack` views).
         ``kernel_lock`` is held only around kernel dispatch, never around
         host packing or result waits."""
         from collections import deque  # noqa: PLC0415
-        if self._device is None:
-            self._device = _DeviceExec(self._comp, self.backend)
+        with self._host_lock:
+            if self._device is None:
+                self._device = _DeviceExec(self._comp, self.backend)
         dev = self._device
         pending: deque = deque()
-        for c in batched:
-            if max(progs[i].n_rows for i in c) == 0:
-                self._fill_empty(c, out)
-                continue
-            jobs = []
-            for sc in dev.shard(c, progs):
-                S0 = max(progs[i].n_rows for i in sc)
-                if S0 == 0:    # a shard of all-zero-μop programs
-                    self._fill_empty(sc, out)
+        jobs: list = []
+        try:
+            for c in batched:
+                if max(progs[i].n_rows for i in c) == 0:
+                    self._fill_empty(c, out)
                     continue
-                R0 = max(max(progs[i].max_r for i in sc), 1)
-                slot = dev.acquire(S0, len(sc), R0)
-                pk = self._pack_chunk(sc, progs, bufs=slot.bufs)
-                jobs.append((pk, slot))
-            if not jobs:
-                continue
-            futs = dev.dispatch(jobs, kernel_lock)
-            pending.append((jobs, futs))
-            while len(pending) > 1:
+                jobs = []
+                for sc in dev.shard(c, progs):
+                    S0 = max(progs[i].n_rows for i in sc)
+                    if S0 == 0:    # a shard of all-zero-μop programs
+                        self._fill_empty(sc, out)
+                        continue
+                    R0 = max(max(progs[i].max_r for i in sc), 1)
+                    slot = dev.acquire(S0, len(sc), R0)
+                    pk = self._pack_chunk(sc, progs, bufs=slot.bufs)
+                    jobs.append((pk, slot))
+                if not jobs:
+                    continue
+                futs = dev.dispatch(jobs, kernel_lock)
+                pending.append((jobs, futs))
+                while len(pending) > 1:
+                    self._finalize_device(*pending.popleft(), out)
+            while pending:
                 self._finalize_device(*pending.popleft(), out)
-        while pending:
-            self._finalize_device(*pending.popleft(), out)
+        except BaseException:
+            # error path: slots must not stay leased forever (a transient
+            # kernel failure would otherwise leak pinned buffers on every
+            # wave).  The current chunk's slots have no dispatched
+            # kernels if it never reached pending; dispatched chunks go
+            # through _abort_jobs, which waits out in-flight kernels
+            if not pending or pending[-1][0] is not jobs:
+                for _, slot in jobs:
+                    slot.release()
+            while pending:
+                _abort_jobs(*pending.popleft())
+            raise
 
     def _finalize_device(self, jobs, futs, out) -> None:
-        for (pk, _), fut in zip(jobs, futs):
-            done, counts = fut.result()   # blocks until the shard finishes
-            self._extract(pk, done, counts, out)
+        try:
+            for (pk, slot), fut in zip(jobs, futs):
+                done, counts = fut.result()  # blocks until the shard ends
+                self._extract(pk, done, counts, out)
+                # only now is the slot reusable: _extract read pk.vis,
+                # which aliases the slot's vis buffer — releasing at
+                # dispatch would let a fast same-bucket chunk k+1 re-zero
+                # it mid-extraction
+                slot.release()
+        except BaseException:
+            _abort_jobs(jobs, futs)
+            raise
 
 
 class _DeviceExec:
     """Per-machine device execution state: AOT-compiled kernels per shape
     bucket, the device-resident μop mask LUT, a small kernel thread pool
     (lane shards execute concurrently — the compiled kernels release the
-    GIL), and recycled per-bucket packing-buffer slots guarded by their
-    in-flight kernel (host buffers can be zero-copy aliases on device)."""
+    GIL), and recycled per-bucket packing-buffer slots whose lease lasts
+    until their chunk's results are extracted (host buffers can be
+    zero-copy aliases on device, and extraction reads the slot's ``vis``
+    plane)."""
 
     _BUCKETS_MAX = 8     # bucket slot-ring pool bound (LRU)
-    _RING = 4            # buffer slots per bucket (shards x pipeline depth)
     _SHARD_MIN_LANES = 64
 
     def __init__(self, comp: CompiledUArch, kind: str):
@@ -935,7 +981,8 @@ class _DeviceExec:
         self.buckets: set = set()
         self.n_workers = max(1, os.cpu_count() or 1)
         self._pool = None
-        self._rings: dict = {}   # bucket -> (slots list, next index)
+        self._lock = threading.Lock()   # guards slot leasing / ring LRU
+        self._rings: dict = {}   # bucket -> slot list (LRU by bucket)
 
     def stats(self) -> dict:
         return {"backend": self.kind, "compiles": self.compiles,
@@ -960,47 +1007,33 @@ class _DeviceExec:
         return (_bucket(S0, 32), _bucket(E0, 8), _next_pow2(R0))
 
     def acquire(self, S0: int, E0: int, R0: int) -> "_BufSlot":
-        """Lease a packing-buffer slot for one shard.  A slot is unusable
-        while *leased* (packed, dispatch pending — two shards of one chunk
-        often share a bucket and must never share buffers) or while its
-        kernel is in flight; ``dispatch`` converts the lease into the
-        kernel future, which releases the slot when it resolves."""
+        """Lease a packing-buffer slot for one shard.  A slot stays leased
+        from here until :meth:`~_BufSlot.release` in ``_finalize_device``
+        — through packing, kernel flight, AND extraction (two shards of
+        one chunk often share a bucket and must never share buffers; the
+        kernel may read the buffers as zero-copy device aliases; and
+        extraction still reads the slot's ``vis`` plane).  If every slot
+        is leased a new one is allocated: live slots are bounded by the
+        lease discipline itself (pipeline depth x shards per chunk), so
+        the ring never grows past warm steady state.  Mutex-guarded so
+        concurrent ``run_batch`` callers can never double-lease a slot."""
         key = self.bucket_shape(S0, E0, R0)
-        ring = self._rings.get(key)
-        if ring is None:
-            while len(self._rings) >= self._BUCKETS_MAX:
-                self._rings.pop(next(iter(self._rings)))
-            ring = self._rings[key] = [[], 0]
-        else:
-            self._rings[key] = self._rings.pop(key)   # LRU touch
-        slots, nxt = ring
-        # prefer a slot whose kernel already finished (warm waves then
-        # reuse the same faulted-in pages instead of allocating)
-        for slot in slots:
-            if not slot.leased and (slot.inflight is None
-                                    or slot.inflight.done()):
-                slot.wait()
-                slot.leased = True
-                return slot
-        ring_cap = max(self._RING, 2 * self.n_workers)
-        if len(slots) < ring_cap:
+        with self._lock:
+            ring = self._rings.get(key)
+            if ring is None:
+                while len(self._rings) >= self._BUCKETS_MAX:
+                    self._rings.pop(next(iter(self._rings)))
+                ring = self._rings[key] = []
+            else:
+                self._rings[key] = self._rings.pop(key)   # LRU touch
+            for slot in ring:   # a released slot has been fully extracted
+                if not slot.leased:
+                    slot.leased = True
+                    return slot
             slot = _BufSlot(self._alloc(*key))
-            slots.append(slot)
+            ring.append(slot)
             slot.leased = True
             return slot
-        # all slots busy: block on the oldest non-leased in-flight one
-        # (a leased slot must never be handed out twice)
-        for off in range(len(slots)):
-            slot = slots[(nxt + off) % len(slots)]
-            if not slot.leased:
-                ring[1] = (nxt + off + 1) % len(slots)
-                slot.wait()
-                slot.leased = True
-                return slot
-        slot = _BufSlot(self._alloc(*key))   # everything leased: overflow
-        slots.append(slot)
-        slot.leased = True
-        return slot
 
     @staticmethod
     def _alloc(S, E, R):
@@ -1011,13 +1044,14 @@ class _DeviceExec:
 
     # -- dispatch -------------------------------------------------------
     def _get_pool(self):
-        if self._pool is None:
-            from concurrent.futures import (  # noqa: PLC0415
-                ThreadPoolExecutor)
-            self._pool = ThreadPoolExecutor(
-                max_workers=self.n_workers,
-                thread_name_prefix="batch-sim-kernel")
-        return self._pool
+        with self._lock:   # concurrent callers must not each build a pool
+            if self._pool is None:
+                from concurrent.futures import (  # noqa: PLC0415
+                    ThreadPoolExecutor)
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.n_workers,
+                    thread_name_prefix="batch-sim-kernel")
+            return self._pool
 
     def dispatch(self, jobs, kernel_lock=None) -> list:
         """Enqueue one kernel call per shard on the device pool; returns
@@ -1028,7 +1062,7 @@ class _DeviceExec:
         pool = self._get_pool()
         M, P = self.comp.mask_table.shape
         calls = []
-        for pk, slot in jobs:
+        for pk, _ in jobs:
             E, S = pk.issue.shape
             R = pk.prod.shape[2]
             fn, compiled_now = _compiled_kernel(self.kind, S, E, R, M, P)
@@ -1037,41 +1071,53 @@ class _DeviceExec:
             self.buckets.add((S, E, R))
             self.kernel_calls += 1
             calls.append((fn, (pk.issue, pk.mask, pk.lat, pk.blk, pk.valid,
-                               pk.prod, pk.delta, self.lut), slot))
+                               pk.prod, pk.delta, self.lut)))
         if kernel_lock is not None:
             with kernel_lock:
                 futs = [pool.submit(_run_kernel, fn, args)
-                        for fn, args, _ in calls]
+                        for fn, args in calls]
         else:
             futs = [pool.submit(_run_kernel, fn, args)
-                    for fn, args, _ in calls]
-        for (_, _, slot), fut in zip(calls, futs):
-            slot.inflight = fut
-            slot.leased = False      # lease becomes the kernel future
+                    for fn, args in calls]
+        # the slots stay leased: ``_finalize_device`` releases them only
+        # after extraction, which reads the slots' vis buffers
         return futs
 
 
 class _BufSlot:
-    """One recycled packing-buffer set plus its occupancy state: ``leased``
-    between acquire and dispatch (packed data must not be overwritten),
-    then ``inflight`` holds the kernel future until it resolves."""
-    __slots__ = ("bufs", "inflight", "leased")
+    """One recycled packing-buffer set.  ``leased`` is True from
+    ``_DeviceExec.acquire`` until :meth:`release` after the chunk's
+    results are *extracted* — kernel completion alone does not free the
+    slot, because extraction reads the slot's ``vis`` plane through the
+    :class:`_ChunkPack` views (and the kernel may have read the buffers
+    as zero-copy device aliases)."""
+    __slots__ = ("bufs", "leased")
 
     def __init__(self, bufs):
         self.bufs = bufs
-        self.inflight = None
         self.leased = False
 
-    def wait(self) -> None:
-        if self.inflight is not None:
-            self.inflight.result()
-            self.inflight = None
+    def release(self) -> None:
+        self.leased = False
+
+
+def _abort_jobs(jobs, futs) -> None:
+    """Error-path slot cleanup: wait for every dispatched shard kernel to
+    settle (a still-running kernel may be reading the slot's buffers,
+    possibly as zero-copy device aliases) and release every slot —
+    idempotent, so jobs already released by the success path are fine."""
+    for (_, slot), fut in zip(jobs, futs):
+        try:
+            fut.exception()          # blocks until the kernel settles
+        except BaseException:        # cancelled: the kernel never ran
+            pass
+        slot.release()
 
 
 def _run_kernel(fn, args):
     """Pool worker: execute one compiled shard kernel and realize its
-    outputs on the host (so the packing buffers are free for reuse once
-    the future resolves)."""
+    outputs on the host (so finalization only touches host arrays; the
+    packing buffers themselves stay leased until extraction)."""
     done, counts = fn(*args)
     return np.asarray(done), np.asarray(counts)
 
@@ -1183,7 +1229,11 @@ def _build_scan_fn():
         R = prod.shape[2]
         K = _scan_block(S)
         nb = S // K
-        big = jnp.int32(1 << 30)
+        # disallowed-port sentinel: INT32_MAX, matching the numpy kernel's
+        # int64-max (real candidate times stay below it over the whole
+        # documented cycles < 2^31 - 1 envelope; count keys are far
+        # smaller), so a disallowed port can never win either min pass
+        big = jnp.int32(2**31 - 1)
         P = lut.shape[1]
         # the (count << idx_bits | port) dispatch key: one int32 per port,
         # so the tie-break needs a single min+argmin pass (the numpy
@@ -1268,7 +1318,7 @@ def _build_pallas_fn(S: int, E: int, R: int, M: int, P: int):
     while E % B:
         B //= 2
     grid = (E // B,)
-    big = 1 << 30
+    big = 2**31 - 1   # disallowed-port sentinel (see the scan kernel)
 
     def kernel(issue_ref, mask_ref, lat_ref, blk_ref, valid_ref, prod_ref,
                delta_ref, lut_ref, done_ref, counts_ref):

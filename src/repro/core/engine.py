@@ -145,9 +145,12 @@ class EngineStats:
     machine_runs: int = 0  # raw machine runs (2 per execution)
     batches: int = 0
     evictions: int = 0     # cache entries dropped by the LRU bound
-    # machine-side lowering-cache counters (snapshot of the batched
-    # backend's totals, refreshed after every executed wave): warm waves
-    # skip Python lowering entirely when these hit
+    # machine-side lowering-cache counters: this engine's share of the
+    # batched backend's totals (deltas against a baseline snapshot taken
+    # before the engine's first executed wave, so a machine reused across
+    # engines/campaigns does not leak prior runs' counts), refreshed
+    # after every executed wave.  Warm waves skip Python lowering
+    # entirely when these hit
     lowering_hits: int = 0
     lowering_misses: int = 0
     lowering_evictions: int = 0
@@ -225,6 +228,12 @@ class MeasurementEngine:
         self.max_entries = max_entries
         self.stats = EngineStats()
         self._lock = threading.Lock()
+        # lowering-counter baseline: the backend stats dict we snapshotted
+        # (identity-tracked — set_table_index rebuilds the machine's
+        # batched backend, restarting its counters, so a stale baseline
+        # would report negative deltas) and its totals at snapshot time
+        self._lowering_src = None
+        self._lowering_base: dict = {}
 
     # -- single experiment -------------------------------------------------
     def measure(self, exp: Experiment) -> Counters:
@@ -275,6 +284,14 @@ class MeasurementEngine:
     # -- Algorithm 2: overhead-cancelling differenced runs, one wave -------
     def _execute_wave(self, experiments, kernel_lock=None) -> list[Counters]:
         experiments = list(experiments)
+        ls0 = getattr(self.machine, "lowering_stats", None)
+        if ls0 and ls0 is not self._lowering_src:
+            # first sight of this backend's counter dict (machine warmed
+            # by prior engines, or its backend rebuilt since our last
+            # wave): snapshot a baseline — work counted before this
+            # engine's next wave is not this engine's
+            self._lowering_src = ls0
+            self._lowering_base = dict(ls0)
         codes: list = []
         for e in experiments:
             codes.append(list(e.code) * e.n_small)
@@ -283,10 +300,18 @@ class MeasurementEngine:
         self.stats.machine_runs += len(codes)
         self.stats.executions += len(experiments)
         ls = getattr(self.machine, "lowering_stats", None)
-        if ls:   # snapshot the backend's lowering-cache totals
-            self.stats.lowering_hits = ls["hits"]
-            self.stats.lowering_misses = ls["misses"]
-            self.stats.lowering_evictions = ls["evictions"]
+        if ls:   # this engine's share of the backend's lifetime totals
+            if ls is not self._lowering_src:
+                # the backend materialized (or was rebuilt) during this
+                # wave: everything it counted happened in this wave
+                self._lowering_src = ls
+                self._lowering_base = {}
+            base = self._lowering_base
+            self.stats.lowering_hits = ls["hits"] - base.get("hits", 0)
+            self.stats.lowering_misses = (ls["misses"]
+                                          - base.get("misses", 0))
+            self.stats.lowering_evictions = (ls["evictions"]
+                                             - base.get("evictions", 0))
         out = []
         for i, e in enumerate(experiments):
             c1, c2 = raw[2 * i], raw[2 * i + 1]

@@ -311,6 +311,46 @@ def test_lowering_cache_hits_when_engine_misses_on_params():
     assert s2["lowering_misses"] <= s["lowering_misses"] + len(bodies)
 
 
+def test_lowering_counters_are_per_engine_deltas():
+    """A fresh engine on a warm (reused) machine must report only its own
+    share of the backend's lowering work — not the machine's lifetime
+    totals, which include prior engines' campaigns."""
+    from repro.core.engine import Experiment, MeasurementEngine
+
+    m = SimMachine(SIM_SKL, TEST_ISA, min_lanes=1)
+    bodies = [tuple(independent_seq(TEST_ISA[n], RegPool(), 4))
+              for n in ("IMUL_R64_R64", "ADC_R64_R64")]
+    eng1 = MeasurementEngine(m)
+    eng1.submit([Experiment.of(b) for b in bodies])
+    assert eng1.stats.lowering_misses == m.lowering_stats["misses"] > 0
+    eng2 = MeasurementEngine(m)         # fresh engine, warm machine
+    eng2.submit([Experiment.of(b) for b in bodies])
+    # identical wave: every lowering probe hits, so THIS engine's miss
+    # count is zero even though the machine's totals are not
+    assert eng2.stats.lowering_misses == 0
+    assert eng2.stats.lowering_hits > 0
+    assert m.lowering_stats["misses"] == eng1.stats.lowering_misses
+
+
+def test_lowering_deltas_survive_backend_rebuild():
+    """``set_table_index`` rebuilds the machine's batched backend, whose
+    counters restart at zero; a previously attached engine must
+    re-baseline (the stats dict identity changed) instead of reporting
+    negative lowering deltas against its stale snapshot."""
+    from repro.core.engine import Experiment, MeasurementEngine
+
+    m = SimMachine(SIM_SKL, TEST_ISA, min_lanes=1)
+    eng = MeasurementEngine(m)
+    bodies = [tuple(independent_seq(TEST_ISA[n], RegPool(), 4))
+              for n in ("IMUL_R64_R64", "ADC_R64_R64")]
+    eng.submit([Experiment.of(b) for b in bodies])
+    assert eng.stats.lowering_misses > 0
+    m.set_table_index(UopTableIndex.for_isa(TEST_ISA))   # resets backend
+    eng.submit([Experiment.of(b, n_small=20) for b in bodies])
+    assert eng.stats.lowering_misses >= 0
+    assert eng.stats.lowering_hits >= 0
+
+
 def test_lowering_cache_eviction_bound():
     m = BatchSimMachine(SIM_SKL, TEST_ISA, min_lanes=1,
                         lower_cache_entries=3)
@@ -660,6 +700,57 @@ def test_buffer_reuse_with_narrower_read_width(backend):
         for c, code in zip(got, wave):
             ref = scalar.run(list(code))
             assert c.cycles == ref.cycles and c.port_uops == ref.port_uops
+
+
+def test_device_slot_leased_until_extraction():
+    """Regression: a packing-buffer slot must stay leased until its
+    chunk's results have been *extracted* (``release()`` in
+    ``_finalize_device``), not merely until its kernel future resolves —
+    ``_extract`` reads ``pk.vis``, which aliases the slot's vis buffer,
+    so freeing the slot at dispatch let a fast same-bucket chunk k+1
+    re-zero it mid-extraction and corrupt chunk k's cycle counts."""
+    pytest.importorskip("jax")
+    from repro.core.batch_sim import _DeviceExec
+
+    m = BatchSimMachine(SIM_SKL, TEST_ISA, backend="jax", min_lanes=1)
+    dev = _DeviceExec(m._comp, "jax")
+    s1 = dev.acquire(8, 8, 1)
+    # with no kernel in flight at all (the state a resolved future used
+    # to leave behind), a leased slot must never be handed out again
+    s2 = dev.acquire(8, 8, 1)
+    assert s2 is not s1
+    assert s1.leased and s2.leased
+    s1.release()                        # extraction completed
+    assert dev.acquire(8, 8, 1) is s1   # only now is the slot reusable
+
+
+def test_kernel_failure_releases_slots(monkeypatch):
+    """A transient kernel failure must not leak leased buffer slots: the
+    error path waits out in-flight shard kernels, releases every slot,
+    and the machine recovers on the next wave with correct results."""
+    pytest.importorskip("jax")
+    import repro.core.batch_sim as bs
+
+    m = BatchSimMachine(SIM_SKL, TEST_ISA, backend="jax", min_lanes=1)
+    codes = _random_codes(12, n_bodies=4)
+    real = bs._run_kernel
+    calls = []
+
+    def boom(fn, args):
+        calls.append(1)
+        raise RuntimeError("transient kernel failure")
+
+    monkeypatch.setattr(bs, "_run_kernel", boom)
+    with pytest.raises(RuntimeError, match="transient kernel failure"):
+        m.run_batch(codes)
+    assert calls
+    for ring in m._device._rings.values():
+        assert all(not s.leased for s in ring)
+    monkeypatch.setattr(bs, "_run_kernel", real)
+    ref = [SimMachine(SIM_SKL, TEST_ISA).run(list(c)) for c in codes]
+    got = m.run_batch(codes)
+    for a, b in zip(ref, got):
+        assert a.cycles == b.cycles and a.port_uops == b.port_uops
 
 
 def test_simmachine_degenerate_wave_respects_min_lanes():
