@@ -236,7 +236,8 @@ class BatchSimMachine:
     def __init__(self, uarch: UArch, isa: ISA, backend: str = "numpy",
                  table_index: UopTableIndex | None = None,
                  min_lanes: int = DEFAULT_MIN_LANES,
-                 lower_cache_entries: int | None = DEFAULT_LOWER_CACHE):
+                 lower_cache_entries: int | None = DEFAULT_LOWER_CACHE,
+                 devices=None):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}")
         if backend != "numpy" and _jax() is None:
@@ -247,6 +248,14 @@ class BatchSimMachine:
         self.name = uarch.name
         self.ports = uarch.ports
         self.backend = backend
+        # device placement spec for the jax/pallas backends: None (the
+        # REPRO_SIM_DEVICES env knob, default all available devices), an
+        # integer count, "all", or an explicit jax device sequence —
+        # resolved lazily by core/device_mesh when the device executor is
+        # first built.  More than one resolved device shards every wave's
+        # lanes across a 1-D ``lanes`` mesh; a single device (the normal
+        # CPU case) keeps the single-device path, bit-identical either way
+        self.devices = devices
         # a padded chunk with fewer lanes than this runs on the scalar
         # oracle instead: the array program's fixed per-step dispatch cost
         # only amortizes across enough parallel lanes (results are
@@ -270,10 +279,23 @@ class BatchSimMachine:
     def run(self, code) -> Counters:
         return self.run_batch([code])[0]
 
+    def set_devices(self, devices) -> None:
+        """Adopt a device placement (count, ``"all"``, or an explicit jax
+        device sequence — see :mod:`repro.core.device_mesh`).  The device
+        executor is rebuilt on the next wave; results are bit-identical
+        for every placement.  ``Campaign.run`` uses this to place each
+        machine on a disjoint device subset."""
+        with self._host_lock:
+            self.devices = devices
+            self._device = None
+
     def device_stats(self) -> dict:
         """Device-kernel telemetry: compile count (the CI recompile probe
-        asserts ``compiles <= len(buckets)``), kernel dispatches, and the
-        shape buckets seen so far.  Empty for the numpy backend."""
+        asserts ``compiles <= len(buckets)``), kernel dispatches, the
+        shape buckets seen so far, the resolved device placement, and
+        per-device compile/kernel-call/lane counters (``per_device``,
+        keyed by jax device id — cross-device recompiles show up here).
+        Empty for the numpy backend."""
         if self._device is None:
             return {}
         return self._device.stats()
@@ -286,10 +308,11 @@ class BatchSimMachine:
         GIL-bound kernels — the numpy backend's Python-stepped loop and
         the scalar-oracle fallback — which thrash when interleaved across
         threads; host lowering and packing always run outside it.  The
-        device backends hold it only around kernel *dispatch*: their
-        compiled kernels release the GIL and are scheduled by the
-        machine's device pool, so serializing their execution would not
-        prevent thrash, only forfeit overlap (see ``WaveScheduler``).
+        device backends do not take it: their compiled kernels release
+        the GIL and are scheduled by the machine's device pool, and
+        dispatch serializes on the executor's per-device-subset lock
+        (:func:`repro.core.device_mesh.dispatch_lock`) so machines on
+        disjoint device subsets overlap (see ``WaveScheduler``).
 
         Concurrent ``run_batch`` calls on one machine instance are safe —
         the lowering cache/recipe memo and the device buffer-slot leasing
@@ -904,7 +927,12 @@ class BatchSimMachine:
         from collections import deque  # noqa: PLC0415
         with self._host_lock:
             if self._device is None:
-                self._device = _DeviceExec(self._comp, self.backend)
+                from repro.core.device_mesh import (  # noqa: PLC0415
+                    resolve_devices)
+                self._device = _DeviceExec(
+                    self._comp, self.backend,
+                    devices=resolve_devices(self.devices),
+                    min_lanes=self.min_lanes)
         dev = self._device
         pending: deque = deque()
         jobs: list = []
@@ -966,19 +994,58 @@ class _DeviceExec:
     GIL), and recycled per-bucket packing-buffer slots whose lease lasts
     until their chunk's results are extracted (host buffers can be
     zero-copy aliases on device, and extraction reads the slot's ``vis``
-    plane)."""
+    plane).
+
+    With more than one resolved device the executor runs in **mesh
+    mode**: each chunk's lanes are sharded across a 1-D ``lanes`` mesh
+    (``shard_map`` over the bucketed kernel, lane-axis
+    ``PartitionSpec``), with the chunk padded to a lanes-divisible bucket
+    width so every device runs one equal lane block of the same
+    executable.  Buffer slots are pooled per ``(bucket, mesh width)`` —
+    the per-device pools of the lease protocol — and kernel dispatch is
+    serialized by the executor's **per-device-subset lock** (see
+    :func:`repro.core.device_mesh.dispatch_lock`) instead of the
+    campaign-wide execute lock, so machines placed on disjoint device
+    subsets never serialize each other's kernels."""
 
     _BUCKETS_MAX = 8     # bucket slot-ring pool bound (LRU)
     _SHARD_MIN_LANES = 64
 
-    def __init__(self, comp: CompiledUArch, kind: str):
+    def __init__(self, comp: CompiledUArch, kind: str, devices=(),
+                 min_lanes: int = DEFAULT_MIN_LANES):
         import os  # noqa: PLC0415
+        from repro.core.device_mesh import (  # noqa: PLC0415
+            dispatch_lock, jax_devices)
         self.comp = comp
         self.kind = kind
-        self.lut = comp.device_mask_table()
+        self.devices = tuple(devices)
+        self.min_lanes = max(min_lanes, 1)
+        all_devs = jax_devices()
+        default = all_devs[0] if all_devs else None
+        # mesh mode whenever the placement is not simply "the default
+        # device": >1 device shards lanes; a single non-default device
+        # (campaign placement with more machines than devices) still needs
+        # the mesh wrapper to pin its kernels to that device
+        self.mesh_mode = bool(self.devices) and (
+            len(self.devices) > 1
+            or (default is not None and self.devices[0].id != default.id))
+        self.n_mesh = len(self.devices) if self.mesh_mode else 1
+        self.lut = None if self.mesh_mode else comp.device_mask_table()
+        self._luts: dict = {}    # mesh width -> replicated device LUT
+        # per-subset dispatch lock (module-wide): machines sharing this
+        # device subset serialize host-side dispatch on it; disjoint
+        # subsets dispatch concurrently
+        self.dispatch_lock = dispatch_lock(
+            self.devices or ((default,) if default is not None else ()))
         self.compiles = 0
         self.kernel_calls = 0
         self.buckets: set = set()
+        # per-device telemetry: device id -> counters (a mesh dispatch
+        # counts on every participating device)
+        self.per_device: dict = {
+            d.id: {"compiles": 0, "kernel_calls": 0, "lanes": 0,
+                   "buckets": set()}
+            for d in (self.devices or ((default,) if default else ()))}
         self.n_workers = max(1, os.cpu_count() or 1)
         self._pool = None
         self._lock = threading.Lock()   # guards slot leasing / ring LRU
@@ -987,13 +1054,25 @@ class _DeviceExec:
     def stats(self) -> dict:
         return {"backend": self.kind, "compiles": self.compiles,
                 "kernel_calls": self.kernel_calls,
-                "buckets": sorted(self.buckets)}
+                "buckets": sorted(self.buckets),
+                "mesh": self.mesh_mode,
+                "devices": [d.id for d in self.devices],
+                "per_device": {
+                    did: {"compiles": c["compiles"],
+                          "kernel_calls": c["kernel_calls"],
+                          "lanes": c["lanes"],
+                          "buckets": sorted(c["buckets"])}
+                    for did, c in self.per_device.items()}}
 
     # -- lane sharding --------------------------------------------------
     def shard(self, chunk, progs) -> list:
         """Split a chunk into contiguous per-core lane shards (the chunk
         arrives sorted by descending length, so later shards pad to a
-        smaller S bucket)."""
+        smaller S bucket).  In mesh mode the chunk stays whole: per-device
+        subdivision happens through the lane-axis sharding of one fused
+        kernel, not through separate host-dispatched shards."""
+        if self.mesh_mode:
+            return [chunk]
         E0 = len(chunk)
         n = min(self.n_workers, E0 // self._SHARD_MIN_LANES)
         if n <= 1:
@@ -1001,10 +1080,26 @@ class _DeviceExec:
         per = (E0 + n - 1) // n
         return [chunk[k:k + per] for k in range(0, E0, per)]
 
+    def mesh_width(self, E0: int) -> int:
+        """Devices used for an ``E0``-lane chunk: capped so every
+        per-device lane shard keeps at least ``min_lanes`` lanes — the
+        thin-chunk scalar crossover applies to the *per-device shard
+        width*, not the whole wave (a wave wide enough in total but thin
+        per device runs on fewer devices instead of paying kernel
+        overhead on sub-crossover shards)."""
+        return max(1, min(self.n_mesh, E0 // self.min_lanes))
+
     # -- buckets / buffer slots ----------------------------------------
     @staticmethod
     def bucket_shape(S0: int, E0: int, R0: int) -> tuple:
         return (_bucket(S0, 32), _bucket(E0, 8), _next_pow2(R0))
+
+    def _mesh_bucket(self, S0: int, E0: int, R0: int, n_use: int) -> tuple:
+        """Mesh-mode bucket: lane width padded per device and multiplied
+        back up, so the global width is lanes-divisible (every device gets
+        one equal ``E_dev`` block of the same bucketed executable)."""
+        e_dev = _bucket((E0 + n_use - 1) // n_use, 8)
+        return (_bucket(S0, 32), e_dev * n_use, _next_pow2(R0))
 
     def acquire(self, S0: int, E0: int, R0: int) -> "_BufSlot":
         """Lease a packing-buffer slot for one shard.  A slot stays leased
@@ -1016,8 +1111,21 @@ class _DeviceExec:
         is leased a new one is allocated: live slots are bounded by the
         lease discipline itself (pipeline depth x shards per chunk), so
         the ring never grows past warm steady state.  Mutex-guarded so
-        concurrent ``run_batch`` callers can never double-lease a slot."""
-        key = self.bucket_shape(S0, E0, R0)
+        concurrent ``run_batch`` callers can never double-lease a slot.
+
+        In mesh mode the slot pool is keyed by ``(bucket, mesh width)`` —
+        per-device buffer pools: a slot's buffers are sharded onto the
+        first ``n_use`` devices at dispatch, so slots of different mesh
+        widths never alias and a reused slot always re-shards onto the
+        same device subset."""
+        if self.mesh_mode:
+            n_use = self.mesh_width(E0)
+            shape = self._mesh_bucket(S0, E0, R0, n_use)
+            key = shape + (n_use,)
+        else:
+            n_use = None
+            shape = self.bucket_shape(S0, E0, R0)
+            key = shape
         with self._lock:
             ring = self._rings.get(key)
             if ring is None:
@@ -1030,7 +1138,7 @@ class _DeviceExec:
                 if not slot.leased:
                     slot.leased = True
                     return slot
-            slot = _BufSlot(self._alloc(*key))
+            slot = _BufSlot(self._alloc(*shape), n_use)
             ring.append(slot)
             slot.leased = True
             return slot
@@ -1053,30 +1161,71 @@ class _DeviceExec:
                     thread_name_prefix="batch-sim-kernel")
             return self._pool
 
+    def _mesh_lut(self, n_use: int):
+        """The μop port-mask LUT replicated across the first ``n_use``
+        mesh devices (resident per mesh width, transferred once)."""
+        lut = self._luts.get(n_use)
+        if lut is None:
+            import jax  # noqa: PLC0415
+            from repro.core.device_mesh import lane_mesh  # noqa: PLC0415
+            mesh = lane_mesh(self.devices[:n_use])
+            lut = jax.device_put(self.comp.mask_table, mesh.replicated)
+            self._luts[n_use] = lut
+        return lut
+
+    def _record(self, devs, bucket, compiled_now, E0, e_dev) -> None:
+        """Per-device telemetry for one dispatch: every participating
+        device counts the call; real (non-padding) lanes are attributed
+        by their contiguous block position."""
+        for k, d in enumerate(devs):
+            c = self.per_device.setdefault(
+                d.id, {"compiles": 0, "kernel_calls": 0, "lanes": 0,
+                       "buckets": set()})
+            c["kernel_calls"] += 1
+            c["compiles"] += 1 if compiled_now else 0
+            c["buckets"].add(bucket)
+            c["lanes"] += max(0, min(E0 - k * e_dev, e_dev))
+
     def dispatch(self, jobs, kernel_lock=None) -> list:
         """Enqueue one kernel call per shard on the device pool; returns
         one future per job yielding host ``(done, counts)`` arrays.
-        ``kernel_lock`` guards only the enqueue — execution parallelism is
-        the pool's (the compiled kernels release the GIL, so cross-worker
-        GIL thrash, the lock's reason to exist, does not apply here)."""
+        Dispatch is guarded by the executor's per-device-subset lock —
+        NOT the campaign-wide ``kernel_lock`` (accepted for protocol
+        compatibility, unused here): only the enqueue is host-side Python,
+        execution parallelism is the pool's and the devices' (compiled
+        kernels release the GIL), and machines placed on disjoint device
+        subsets must never serialize each other's kernels."""
         pool = self._get_pool()
         M, P = self.comp.mask_table.shape
         calls = []
-        for pk, _ in jobs:
+        for pk, slot in jobs:
             E, S = pk.issue.shape
             R = pk.prod.shape[2]
-            fn, compiled_now = _compiled_kernel(self.kind, S, E, R, M, P)
+            if slot.n_use is not None:          # mesh-mode shard
+                from repro.core.device_mesh import (  # noqa: PLC0415
+                    lane_mesh)
+                n_use = slot.n_use
+                e_dev = E // n_use
+                mesh = lane_mesh(self.devices[:n_use])
+                fn, compiled_now = _compiled_kernel(
+                    self.kind, S, e_dev, R, M, P, mesh=mesh)
+                lut = self._mesh_lut(n_use)
+                self._record(mesh.devices, (S, e_dev, R), compiled_now,
+                             pk.E, e_dev)
+            else:
+                n_use, e_dev = 1, E
+                fn, compiled_now = _compiled_kernel(self.kind, S, E, R,
+                                                    M, P)
+                lut = self.lut
+                self._record(self.devices[:1], (S, E, R), compiled_now,
+                             pk.E, E)
             if compiled_now:
                 self.compiles += 1
             self.buckets.add((S, E, R))
             self.kernel_calls += 1
             calls.append((fn, (pk.issue, pk.mask, pk.lat, pk.blk, pk.valid,
-                               pk.prod, pk.delta, self.lut)))
-        if kernel_lock is not None:
-            with kernel_lock:
-                futs = [pool.submit(_run_kernel, fn, args)
-                        for fn, args in calls]
-        else:
+                               pk.prod, pk.delta, lut)))
+        with self.dispatch_lock:
             futs = [pool.submit(_run_kernel, fn, args)
                     for fn, args in calls]
         # the slots stay leased: ``_finalize_device`` releases them only
@@ -1090,12 +1239,16 @@ class _BufSlot:
     results are *extracted* — kernel completion alone does not free the
     slot, because extraction reads the slot's ``vis`` plane through the
     :class:`_ChunkPack` views (and the kernel may have read the buffers
-    as zero-copy device aliases)."""
-    __slots__ = ("bufs", "leased")
+    as zero-copy device aliases).  ``n_use`` records the mesh width the
+    slot was bucketed for (``None`` on the single-device path): the
+    dispatcher shards the slot's buffers across exactly that many
+    devices, so slots are effectively pooled per device subset."""
+    __slots__ = ("bufs", "leased", "n_use")
 
-    def __init__(self, bufs):
+    def __init__(self, bufs, n_use=None):
         self.bufs = bufs
         self.leased = False
+        self.n_use = n_use
 
     def release(self) -> None:
         self.leased = False
@@ -1145,14 +1298,22 @@ _EXEC_CACHE_MAX = 128
 _EXEC_LOCK = threading.Lock()
 
 
-def _compiled_kernel(kind: str, S: int, E: int, R: int, M: int, P: int):
+def _compiled_kernel(kind: str, S: int, E: int, R: int, M: int, P: int,
+                     mesh=None):
     """AOT-compiled dispatch kernel for one shape bucket.  Returns
     ``(callable, compiled_now)``; the executable cache is module-wide, so
     machines sharing bucket shapes share compilations — and a module lock
     keeps concurrent campaign workers from paying for the same multi-
-    second XLA compile twice."""
+    second XLA compile twice.
+
+    With ``mesh`` (a :class:`~repro.core.device_mesh.LaneMesh`) the
+    bucketed kernel is wrapped in ``shard_map`` over the mesh's ``lanes``
+    axis: ``E`` is then the *per-device* lane width and the executable
+    takes ``(E * mesh.n, S)``-shaped operands whose lane blocks land one
+    per device.  Executables are device-bound, so the mesh's device-id
+    tuple is part of the cache key."""
     jax = _jax()
-    key = (kind, S, E, R, M, P)
+    key = (kind, S, E, R, M, P) + ((mesh.key,) if mesh is not None else ())
     hit = _EXEC_CACHE.get(key)
     if hit is not None:
         return hit, False
@@ -1160,23 +1321,43 @@ def _compiled_kernel(kind: str, S: int, E: int, R: int, M: int, P: int):
         hit = _EXEC_CACHE.get(key)      # double-check under the lock
         if hit is not None:
             return hit, False
-        return _compile_kernel(jax, kind, key), True
+        return _compile_kernel(jax, kind, key, mesh), True
 
 
-def _compile_kernel(jax, kind, key):
-    S, E, R, M, P = key[1:]
+def _compile_kernel(jax, kind, key, mesh=None):
+    S, E, R, M, P = key[1:6]
     import jax.numpy as jnp
 
     fn = (_build_pallas_fn(S, E, R, M, P) if kind == "pallas"
           else _build_scan_fn())
-    shapes = (jax.ShapeDtypeStruct((E, S), jnp.int32),
-              jax.ShapeDtypeStruct((E, S), jnp.int32),
-              jax.ShapeDtypeStruct((E, S), jnp.int32),
-              jax.ShapeDtypeStruct((E, S), jnp.int32),
-              jax.ShapeDtypeStruct((E, S), jnp.bool_),
-              jax.ShapeDtypeStruct((E, S, R), jnp.int32),
-              jax.ShapeDtypeStruct((E, S, R), jnp.int32),
-              jax.ShapeDtypeStruct((M, P), jnp.bool_))
+    if mesh is None:
+        shapes = (jax.ShapeDtypeStruct((E, S), jnp.int32),
+                  jax.ShapeDtypeStruct((E, S), jnp.int32),
+                  jax.ShapeDtypeStruct((E, S), jnp.int32),
+                  jax.ShapeDtypeStruct((E, S), jnp.int32),
+                  jax.ShapeDtypeStruct((E, S), jnp.bool_),
+                  jax.ShapeDtypeStruct((E, S, R), jnp.int32),
+                  jax.ShapeDtypeStruct((E, S, R), jnp.int32),
+                  jax.ShapeDtypeStruct((M, P), jnp.bool_))
+    else:
+        from jax.experimental.shard_map import shard_map  # noqa: PLC0415
+        # the per-shard fn sees (E, S) blocks; lanes are independent, so
+        # no collectives and no replication to check
+        fn = shard_map(
+            fn, mesh=mesh.mesh,
+            in_specs=(mesh.spec2,) * 5 + (mesh.spec3,) * 2
+            + (mesh.repl_spec,),
+            out_specs=(mesh.spec2, mesh.spec2), check_rep=False)
+        Eg = E * mesh.n
+        sd = jax.ShapeDtypeStruct
+        shapes = (sd((Eg, S), jnp.int32, sharding=mesh.shard2),
+                  sd((Eg, S), jnp.int32, sharding=mesh.shard2),
+                  sd((Eg, S), jnp.int32, sharding=mesh.shard2),
+                  sd((Eg, S), jnp.int32, sharding=mesh.shard2),
+                  sd((Eg, S), jnp.bool_, sharding=mesh.shard2),
+                  sd((Eg, S, R), jnp.int32, sharding=mesh.shard3),
+                  sd((Eg, S, R), jnp.int32, sharding=mesh.shard3),
+                  sd((M, P), jnp.bool_, sharding=mesh.replicated))
     # donation lets XLA alias the bucket input buffers for outputs; it is
     # unimplemented on the CPU backend (emits warnings), so gate on device
     donate = tuple(range(7)) if jax.default_backend() != "cpu" else ()

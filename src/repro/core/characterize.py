@@ -210,8 +210,12 @@ def characterize(machine, isa: ISA, instr_names=None,
     model.fingerprint = machine_fingerprint(engine.machine)
     model.run_seconds = time.time() - t0
     s1 = engine.stats.as_dict()
-    model.engine_stats = {k: s1[k] - stats0[k] for k in s1
-                          if k != "hit_rate"}
+    # numeric counters delta against the run's baseline; non-numeric
+    # telemetry (the "device" snapshot) is cumulative, carried as-is
+    model.engine_stats = {
+        k: (s1[k] - stats0.get(k, 0)
+            if isinstance(s1[k], (int, float)) else s1[k])
+        for k in s1 if k != "hit_rate"}
     req = model.engine_stats["requests"]
     hits = (model.engine_stats["cache_hits"]
             + model.engine_stats["dedup_hits"])

@@ -154,6 +154,13 @@ class EngineStats:
     lowering_hits: int = 0
     lowering_misses: int = 0
     lowering_evictions: int = 0
+    # machine-side device-kernel telemetry: the batched backend's
+    # ``device_stats()`` snapshot (compile/kernel-call totals plus the
+    # ``per_device`` counters, keyed by jax device id), refreshed after
+    # every executed wave.  Non-numeric — delta consumers (characterize's
+    # engine_stats) skip it; ``bench_backend_matrix`` and the CI recompile
+    # probe read it for cross-device recompiles
+    device: dict = field(default_factory=dict)
 
     @property
     def hit_rate(self) -> float:
@@ -167,7 +174,8 @@ class EngineStats:
                 "lowering_hits": self.lowering_hits,
                 "lowering_misses": self.lowering_misses,
                 "lowering_evictions": self.lowering_evictions,
-                "hit_rate": round(self.hit_rate, 4)}
+                "hit_rate": round(self.hit_rate, 4),
+                "device": dict(self.device)}
 
 
 def _takes_kernel_lock(fn) -> bool:
@@ -312,6 +320,9 @@ class MeasurementEngine:
                                           - base.get("misses", 0))
             self.stats.lowering_evictions = (ls["evictions"]
                                              - base.get("evictions", 0))
+        ds = getattr(self.machine, "device_stats", None)
+        if ds is not None:   # device-kernel telemetry snapshot (see stats)
+            self.stats.device = ds() or {}
         out = []
         for i, e in enumerate(experiments):
             c1, c2 = raw[2 * i], raw[2 * i + 1]
@@ -445,7 +456,14 @@ class Campaign:
 
         Machines that support it share one compiled μop-table index, so
         every uarch's batched backend uses the same instruction numbering
-        (one table set per campaign, not per machine)."""
+        (one table set per campaign, not per machine) — and are placed on
+        **disjoint device subsets** when the host has more than one jax
+        device (see :func:`repro.core.device_mesh.partition`): each uarch's
+        waves then execute on its own devices under its own dispatch lock,
+        so a multi-uarch campaign is wall-clock-bound by one uarch rather
+        than serialized behind a shared device.  With one (or no) device
+        every machine keeps the default placement; results are
+        bit-identical either way."""
         machines = list(machines)
         try:
             from repro.core.uarch_compile import UopTableIndex  # noqa: PLC0415
@@ -457,14 +475,24 @@ class Campaign:
                 setter = getattr(m, "set_table_index", None)
                 if setter is not None:
                     setter(index)
+        from repro.core.device_mesh import (  # noqa: PLC0415
+            partition, resolve_devices)
+        placement = partition(resolve_devices(), len(machines))
+        for m, group in zip(machines, placement):
+            setter = getattr(m, "set_devices", None)
+            if setter is not None and group:
+                setter(group)
         res = CampaignResult()
         t0 = time.perf_counter()
         workers = self.max_workers or max(1, len(machines))
         # per-run cancel event and wave-execution lock (a Campaign object is
         # just config; one instance may serve concurrent run() calls). The
-        # lock serializes the workers' fused array kernels: under the GIL,
-        # concurrently interleaving them only thrashes (wave execution is
-        # the CPU-bound part; plan stepping stays concurrent)
+        # lock serializes the workers' GIL-bound fused array kernels (numpy
+        # backend, scalar fallback): under the GIL, concurrently
+        # interleaving them only thrashes (wave execution is the CPU-bound
+        # part; plan stepping stays concurrent).  Device backends ignore it
+        # for dispatch — they serialize on their own per-device-subset
+        # locks instead, so the disjoint placement above actually overlaps
         cancel = threading.Event()
         execute_lock = threading.Lock()
         with ThreadPoolExecutor(max_workers=workers) as pool:

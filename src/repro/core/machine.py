@@ -20,8 +20,10 @@ per-sequence loop. ``MeasurementEngine.submit`` routes every deduplicated
 miss-set through this protocol. Lock-aware machines additionally accept
 ``run_batch(codes, kernel_lock=...)``: the lock serializes GIL-bound
 kernel execution (numpy backend, scalar fallback) while host
-lowering/packing overlaps other workers' kernels; device backends hold
-it only around dispatch (their kernels release the GIL).
+lowering/packing overlaps other workers' kernels; device backends ignore
+it (their kernels release the GIL) and serialize dispatch on their own
+per-device-subset lock instead, so machines placed on disjoint device
+subsets overlap (see ``core/device_mesh.py``).
 ``machine_run_batch`` bridges machines that predate the parameter by
 running them entirely under the lock.
 """

@@ -170,10 +170,12 @@ class WaveScheduler:
     interleaving under the GIL just thrash each other (measured ~8x CPU
     inflation).  Host lowering and wave packing always run outside the
     lock, and plan stepping stays concurrent throughout.  Device backends
-    (jax/pallas) hold the lock only around kernel *dispatch*: their
-    compiled kernels release the GIL and execute on the machine's device
-    pool, so workers' device kernels may overlap — that is compute on
-    real cores, not GIL thrash.
+    (jax/pallas) do not take this lock at all: their compiled kernels
+    release the GIL, and dispatch serializes on the backend's own
+    *per-device-subset* lock (:func:`repro.core.device_mesh
+    .dispatch_lock`) instead — machines placed on disjoint device subsets
+    by ``Campaign.run`` dispatch and execute concurrently, which is
+    compute on distinct devices, not GIL thrash.
     """
 
     def __init__(self, machine_or_engine, *, cancel=None, execute_lock=None):

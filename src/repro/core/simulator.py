@@ -81,18 +81,24 @@ class SimMachine:
     variable, else ``numpy``) — results are bit-identical on every
     backend.  ``min_lanes`` is the thin-chunk scalar-oracle crossover
     forwarded to :class:`~repro.core.batch_sim.BatchSimMachine` (default:
-    the measured crossover, see ``bench_batch_sim``)."""
+    the measured crossover, see ``bench_batch_sim``).  ``devices``
+    selects the device placement for the jax/pallas backends (an integer
+    count, ``"all"``, or an explicit jax device sequence; default: the
+    ``REPRO_SIM_DEVICES`` environment variable, else all available) —
+    more than one device shards wave lanes across a 1-D mesh, still
+    bit-identical (see :mod:`repro.core.device_mesh`)."""
 
     counters_available = True
 
     def __init__(self, uarch: UArch, isa: ISA, backend: str | None = None,
-                 min_lanes: int | None = None):
+                 min_lanes: int | None = None, devices=None):
         self.uarch = uarch
         self.isa = isa
         self.name = uarch.name
         self.ports = uarch.ports
         self.backend = backend
         self.min_lanes = min_lanes
+        self.devices = devices
         self._batch = None        # lazy BatchSimMachine (False: unavailable)
         self._table_index = None  # shared UopTableIndex (set by Campaign)
 
@@ -103,6 +109,15 @@ class SimMachine:
         across the campaign's machines."""
         self._table_index = index
         self._batch = None
+
+    def set_devices(self, devices) -> None:
+        """Adopt a device placement for the batched backend (count,
+        ``"all"``, or an explicit jax device sequence).  ``Campaign.run``
+        uses this to place machines on disjoint device subsets; results
+        are bit-identical for every placement."""
+        self.devices = devices
+        if self._batch:
+            self._batch.set_devices(devices)
 
     @property
     def lowering_stats(self) -> dict:
@@ -151,7 +166,8 @@ class SimMachine:
                 try:
                     self._batch = BatchSimMachine(
                         self.uarch, self.isa, backend=backend,
-                        table_index=self._table_index, min_lanes=min_lanes)
+                        table_index=self._table_index, min_lanes=min_lanes,
+                        devices=self.devices)
                 except RuntimeError:   # jax backend requested, jax missing
                     import warnings  # noqa: PLC0415
                     warnings.warn(f"sim backend {backend!r} unavailable "

@@ -71,20 +71,34 @@ class BatchPredictor:
     def predict(self, code) -> Prediction:
         return self.predict_batch([code])[0]
 
-    def simulate_batch(self, blocks, kernel_lock=None) -> list[float]:
+    def simulate_batch(self, blocks, kernel_lock=None,
+                       devices=None) -> list[float]:
         """Measured steady-state cycles per block iteration, for a whole
         wave of blocks at once (Algorithm-2 differencing on the attached
         machine; the engine dedups the wave and executes the miss-set
         through the machine's batched backend — device-resident when the
         machine's backend is ``jax``/``pallas``, with warm waves skipping
         lowering via the machine's lowering cache).  ``kernel_lock``
-        serializes kernel execution against other engines sharing the
-        lock; host lowering/packing stays concurrent."""
+        serializes GIL-bound kernel execution against other engines
+        sharing the lock; host lowering/packing stays concurrent.
+
+        ``devices`` (an integer count, ``"all"``, or an explicit jax
+        device sequence) re-places the machine's wave execution before
+        this wave — with more than one device the wave's lanes shard
+        across a 1-D mesh (see :mod:`repro.core.device_mesh`), falling
+        back gracefully to the single-device path when the host has fewer
+        devices; results are bit-identical at every device count.
+        ``None`` keeps the machine's current placement (the
+        ``REPRO_SIM_DEVICES`` default)."""
         if self.machine is None:
             raise ValueError("simulate-backed mode needs a machine "
                              "(BatchPredictor(..., machine=...))")
         from repro.core.engine import Experiment, as_engine  # noqa: PLC0415
 
+        if devices is not None:
+            setter = getattr(self.machine, "set_devices", None)
+            if setter is not None:
+                setter(devices)
         engine = as_engine(self.machine)
         res = engine.submit([Experiment.of(b) for b in blocks],
                             kernel_lock=kernel_lock)

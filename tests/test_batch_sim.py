@@ -455,7 +455,10 @@ class _CountingLock:
 def test_kernel_lock_reaches_the_machine():
     from repro.core.engine import Experiment, MeasurementEngine
 
-    m = SimMachine(SIM_SKL, TEST_ISA, min_lanes=1)
+    # numpy explicitly: only the GIL-bound kernels take the campaign
+    # kernel lock — device backends serialize dispatch on their own
+    # per-device-subset locks instead (see core/device_mesh.py)
+    m = SimMachine(SIM_SKL, TEST_ISA, backend="numpy", min_lanes=1)
     eng = MeasurementEngine(m)
     lock = _CountingLock()
     exps = [Experiment.of(independent_seq(TEST_ISA[n], RegPool(), 3))
@@ -472,7 +475,8 @@ def test_scheduler_execute_lock_travels_as_kernel_lock():
     from repro.core.engine import Experiment, MeasurementEngine
     from repro.core.plan import WaveScheduler
 
-    m = SimMachine(SIM_SKL, TEST_ISA, min_lanes=1)
+    # numpy explicitly: the execute lock only serializes GIL-bound kernels
+    m = SimMachine(SIM_SKL, TEST_ISA, backend="numpy", min_lanes=1)
     lock = _CountingLock()
     sched = WaveScheduler(MeasurementEngine(m), execute_lock=lock)
 

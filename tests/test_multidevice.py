@@ -4,6 +4,13 @@ These must run with >1 device while the rest of the suite sees exactly one,
 so each test spawns a subprocess with XLA_FLAGS=--xla_force_host_platform_
 device_count=N and asserts on its output. Covered:
 
+  * mesh-sharded wave execution bit-identical to the numpy backend at 1, 2
+    and 4 devices (ragged/empty waves, jax and pallas backends), with the
+    thin-chunk crossover clamping the mesh width per-device shard,
+  * characterize-to-XML byte-identical across device counts and to the
+    scalar oracle for every SIM_UARCH,
+  * Campaign placing machines on disjoint device subsets with unchanged
+    models,
   * MoE shard_map EP path == dense reference (loss parity),
   * GPipe pipeline over an axis == sequential layer stack,
   * int8-compressed psum ≈ exact psum (and exact for int values),
@@ -28,6 +35,124 @@ def run_py(code: str, devices: int = 4, timeout: int = 480) -> str:
                          capture_output=True, text=True, timeout=timeout)
     assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
     return out.stdout
+
+
+def test_wave_bit_identity_across_device_counts():
+    """Mesh-sharded wave execution (jax at 1/2/4 devices, pallas at 4)
+    is bit-identical to the numpy backend on a ragged wave with empty
+    sequences; the thin-chunk crossover routes on *per-device* shard
+    width (mesh width clamps so no shard drops below min_lanes); warm
+    waves never recompile."""
+    out = run_py("""
+import random
+from repro.core.batch_sim import BatchSimMachine
+from repro.core.isa import TEST_ISA
+from repro.core.machine import RegPool, independent_seq
+from repro.core.uarch import SIM_SKL
+
+rng = random.Random(0)
+specs = ["ADD_R64_R64", "IMUL_R64_R64", "MOV_R64_R64", "PADDD_X_X",
+         "DIV_R64", "MULPS_X_X", "ADC_R64_R64"]
+codes = []
+for _ in range(40):
+    body = independent_seq(TEST_ISA[rng.choice(specs)], RegPool(),
+                           rng.randint(3, 9))
+    codes.append(body * rng.randint(2, 6))
+codes.append([])                       # empty sequence inside the wave
+
+base = BatchSimMachine(SIM_SKL, TEST_ISA, backend="numpy")
+ref = base.run_batch(codes)
+for kind, nd in (("jax", 1), ("jax", 2), ("jax", 4), ("pallas", 4)):
+    m = BatchSimMachine(SIM_SKL, TEST_ISA, backend=kind, devices=nd)
+    got = m.run_batch(codes)
+    assert all(a.cycles == b.cycles and a.port_uops == b.port_uops
+               for a, b in zip(ref, got)), (kind, nd)
+    st = m.device_stats()
+    assert st["mesh"] == (nd > 1), st
+    assert st["devices"] == list(range(nd)), st
+    assert sum(c["lanes"] for c in st["per_device"].values()) >= 40
+    c0 = st["compiles"]
+    m.run_batch(codes)                 # warm wave: zero recompiles
+    assert m.device_stats()["compiles"] == c0, (kind, nd)
+    assert m.run_batch([]) == []
+
+# per-device-shard crossover: 8 lanes / min_lanes 4 on 4 devices must
+# clamp to a 2-device mesh (each shard keeps >= min_lanes lanes), and a
+# sub-crossover chunk stays off the mesh entirely
+d = m._device
+assert d.mesh_width(8) == 2 and d.mesh_width(64) == 4
+assert d.mesh_width(3) == 1
+m2 = BatchSimMachine(SIM_SKL, TEST_ISA, backend="jax", devices=4,
+                     min_lanes=4)
+body = independent_seq(TEST_ISA["ADD_R64_R64"], RegPool(), 4)
+thin = [body * 4] * 8                  # one 8-lane chunk, uniform length
+got = m2.run_batch(thin)
+assert all(a.cycles == b.cycles and a.port_uops == b.port_uops
+           for a, b in zip(base.run_batch(thin), got))
+widths = {k[3] for k in m2._device._rings}   # slot keys carry mesh width
+assert widths == {2}, widths
+print("WAVE_MESH_OK")
+""")
+    assert "WAVE_MESH_OK" in out
+
+
+def test_characterize_xml_identical_across_device_counts():
+    """characterize-to-XML is byte-identical on 1, 2 and 4 forced host
+    devices and to the scalar oracle, for every SIM_UARCH."""
+    out = run_py("""
+from repro.core import model_io
+from repro.core.characterize import characterize
+from repro.core.engine import MeasurementEngine
+from repro.core.isa import TEST_ISA
+from repro.core.simulator import SimMachine
+from repro.core.uarch import SIM_UARCHES
+
+SUBSET = ["ADD_R64_R64", "ADC_R64_R64", "MUL_R64", "SHLD_R64_R64_I8",
+          "MOV_M64_R64", "PADDD_X_X"]
+for name in sorted(SIM_UARCHES):
+    ua = SIM_UARCHES[name]
+    oracle = SimMachine(ua, TEST_ISA)    # scalar/numpy reference
+    want = model_io.to_xml(
+        characterize(MeasurementEngine(oracle), TEST_ISA, SUBSET), TEST_ISA)
+    for nd in (1, 2, 4):
+        m = SimMachine(ua, TEST_ISA, backend="jax", min_lanes=1, devices=nd)
+        got = model_io.to_xml(
+            characterize(MeasurementEngine(m), TEST_ISA, SUBSET), TEST_ISA)
+        assert got == want, (name, nd)
+print("XML_MESH_OK")
+""")
+    assert "XML_MESH_OK" in out
+
+
+def test_campaign_disjoint_device_placement():
+    """Campaign.run places its machines on disjoint device subsets (each
+    with its own dispatch lock) and the resulting models match a
+    single-machine characterization."""
+    out = run_py("""
+from repro.core import model_io
+from repro.core.characterize import characterize
+from repro.core.engine import Campaign, MeasurementEngine
+from repro.core.isa import TEST_ISA
+from repro.core.simulator import SimMachine
+from repro.core.uarch import SIM_HSW, SIM_SKL
+
+SUBSET = ["ADD_R64_R64", "MUL_R64", "PADDD_X_X"]
+machines = [SimMachine(SIM_SKL, TEST_ISA, backend="jax", min_lanes=1),
+            SimMachine(SIM_HSW, TEST_ISA, backend="jax", min_lanes=1)]
+res = Campaign(instr_names=SUBSET).run(machines, TEST_ISA)
+subsets = [m.device_stats()["devices"] for m in machines]
+assert subsets == [[0, 1], [2, 3]], subsets
+assert not (set(subsets[0]) & set(subsets[1]))
+for m in machines:
+    solo = SimMachine(m.uarch, TEST_ISA)
+    want = model_io.to_xml(
+        characterize(MeasurementEngine(solo), TEST_ISA, SUBSET), TEST_ISA)
+    assert model_io.to_xml(res.models[m.name], TEST_ISA) == want, m.name
+    st = res.stats[m.name]["device"]
+    assert st["mesh"] is True and st["kernel_calls"] >= 1
+print("CAMPAIGN_MESH_OK")
+""")
+    assert "CAMPAIGN_MESH_OK" in out
 
 
 def test_moe_shard_map_matches_dense():
