@@ -23,6 +23,9 @@ a human-readable table per benchmark. Paper mapping:
                             (blocked scan) vs pallas (interpret off-TPU)
                             across wave widths, cold vs warm lowering
                             cache, with the kernel recompile probe
+  bench_trace_overhead      observability tax: numpy wave sweep with
+                            repro.obs tracing off vs on, plus the analytic
+                            disabled-overhead bound the CI <2% gate asserts
   bench_device_scaling      mesh-parallel wave execution: warm wave
                             throughput at 1/2/4 forced host devices
                             (subprocess — XLA_FLAGS must precede the jax
@@ -592,6 +595,92 @@ def bench_backend_matrix(smoke: bool = False):
         "meets_2x_target_at_128": meets})
 
 
+TRACE_OVERHEAD_STATS: dict = {}
+
+
+def bench_trace_overhead(smoke: bool = False):
+    """Observability tax: the backend-matrix wave sweep on the numpy
+    backend with tracing disabled vs enabled (repro.obs).  Two numbers
+    matter:
+
+    * the measured enabled/disabled wall ratio (spans are per-wave, not
+      per-μop, so it should be within noise of 1.0);
+    * the **analytic disabled-overhead bound** — spans-per-pass × the
+      measured cost of one disabled span call, as a share of the
+      disabled wall time.  This is the number the <2% gate asserts: it
+      is deterministic, unlike the A/B ratio, which on a busy CI host
+      can swing either way by more than the effect being measured.
+    """
+    import random
+    import time as _time
+
+    from repro.core.batch_sim import BatchSimMachine
+    from repro.core.isa import TEST_ISA
+    from repro.core.machine import RegPool, independent_seq
+    from repro.core.uarch import SIM_SKL
+    from repro.obs import tracer as obs
+    from repro.obs.tracer import Tracer, set_tracer
+
+    specs = ["ADD_R64_R64", "IMUL_R64_R64", "MOV_R64_R64",
+             "SHLD_R64_R64_I8", "PADDD_X_X", "MOV_R64_M64", "ADC_R64_R64",
+             "MULPS_X_X", "DIV_R64", "AESDEC_X_X"]
+    wave = 32 if smoke else 128
+    rng = random.Random(wave)   # same wave construction as backend matrix
+    codes = []
+    for _ in range(wave):
+        body = independent_seq(TEST_ISA[rng.choice(specs)], RegPool(),
+                               rng.randint(4, 12))
+        codes.append(body * 10)
+        codes.append(body * 110)
+    m = BatchSimMachine(SIM_SKL, TEST_ISA, backend="numpy")
+    m.run_batch(codes)          # absorb compiles + cold lowering
+
+    reps = 3 if smoke else 5
+    prev = set_tracer(Tracer(enabled=False))
+    try:
+        t_off = min(_timed(lambda: m.run_batch(codes))[1]
+                    for _ in range(reps)) / 1e6
+        tr = Tracer(enabled=True)
+        set_tracer(tr)
+        t_on = min(_timed(lambda: m.run_batch(codes))[1]
+                   for _ in range(reps)) / 1e6
+        spans_per_pass = len(tr.events()) / reps
+
+        # cost of one disabled span call, measured on the real no-op path
+        set_tracer(Tracer(enabled=False))
+        n = 100_000
+        t0 = _time.perf_counter_ns()
+        for _ in range(n):
+            with obs.span("bench.noop", probe=1):
+                pass
+        noop_ns = (_time.perf_counter_ns() - t0) / n
+    finally:
+        set_tracer(prev)
+
+    ratio = t_on / t_off
+    bound = spans_per_pass * noop_ns / (t_off * 1e9)
+    print("\n== tracing overhead: numpy wave sweep, repro.obs on vs off ==")
+    print(f"{'wave':>6s} {'off_s':>8s} {'on_s':>8s} {'on/off':>7s} "
+          f"{'spans':>7s} {'noop_ns':>8s} {'bound%':>7s}")
+    print(f"{wave:6d} {t_off:8.4f} {t_on:8.4f} {ratio:6.3f}x "
+          f"{spans_per_pass:7.0f} {noop_ns:8.1f} {100 * bound:6.4f}%")
+    assert bound < 0.02, \
+        f"disabled-tracing overhead bound {100 * bound:.3f}% >= 2% " \
+        f"({spans_per_pass:.0f} spans/pass x {noop_ns:.0f}ns noop over " \
+        f"{t_off:.4f}s)"
+    emit("trace_overhead_off", t_off * 1e6 / (2 * wave),
+         f"bound={100 * bound:.4f}%")
+    emit("trace_overhead_on", t_on * 1e6 / (2 * wave),
+         f"on/off={ratio:.3f}x")
+    TRACE_OVERHEAD_STATS.update({
+        "wave": wave, "t_off_s": round(t_off, 4), "t_on_s": round(t_on, 4),
+        "enabled_over_disabled": round(ratio, 4),
+        "spans_per_pass": spans_per_pass,
+        "disabled_span_ns": round(noop_ns, 1),
+        "disabled_overhead_bound_pct": round(100 * bound, 4),
+        "bound_ok": bound < 0.02})
+
+
 DEVICE_SCALING_STATS: dict = {}
 
 # worker for bench_device_scaling: runs in a subprocess because
@@ -1075,6 +1164,7 @@ BENCHES = {
     "bench_simulator": bench_simulator,
     "bench_batch_sim": bench_batch_sim,
     "bench_backend_matrix": bench_backend_matrix,
+    "bench_trace_overhead": bench_trace_overhead,
     "bench_device_scaling": bench_device_scaling,
     "bench_characterize": bench_characterize,
     "bench_wave_fusion": bench_wave_fusion,
@@ -1106,7 +1196,8 @@ def main(argv=None) -> None:
     for name in selected:
         fn = BENCHES[name]
         if name in ("bench_batch_sim", "bench_backend_matrix",
-                    "bench_device_scaling", "bench_characterize"):
+                    "bench_trace_overhead", "bench_device_scaling",
+                    "bench_characterize"):
             fn(smoke=args.smoke)
         else:
             fn()
@@ -1121,6 +1212,7 @@ def main(argv=None) -> None:
         "service": SERVICE_STATS,
         "batch_sim": BATCH_SIM_STATS,
         "backend_matrix": BACKEND_MATRIX_STATS,
+        "trace_overhead": TRACE_OVERHEAD_STATS,
         "device_scaling": DEVICE_SCALING_STATS,
         "characterize": CHARACTERIZE_STATS,
         "wave_fusion": WAVE_FUSION_STATS,
@@ -1132,6 +1224,16 @@ def main(argv=None) -> None:
         path = out / "benchmarks.json"
     path.write_text(json.dumps(payload, indent=1))
     print(f"JSON results (incl. cache hit-rate / speedup) -> {path}")
+
+    # with REPRO_TRACE=1 the whole run was traced: drop the Perfetto-
+    # loadable trace next to the JSON (feed it to
+    # scripts/analyze.py --trace-report for the bottleneck table)
+    from repro.obs import tracer as obs
+    if obs.enabled():
+        from repro.obs.export import write_chrome_trace
+        tpath = path.parent / (path.stem + ".trace.json")
+        write_chrome_trace(tpath)
+        print(f"Chrome/Perfetto trace -> {tpath}")
 
 
 if __name__ == "__main__":

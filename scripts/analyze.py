@@ -15,6 +15,13 @@ Usage:
 
 Without --connect, an in-process service is started over --models
 (default: experiments/models — run examples/export_models.py first).
+
+With --trace-report, no block or service is needed: the argument is a
+trace file written by repro.obs.export (Chrome trace JSON or JSONL; see
+README §Observability) and the output is the per-wave bottleneck
+attribution table from repro.analysis.wave_report::
+
+    PYTHONPATH=src python scripts/analyze.py --trace-report run.trace.json
 """
 from __future__ import annotations
 
@@ -52,8 +59,9 @@ def report(uarch: str, resp: dict) -> str:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("block", help="block file in the textual format, "
-                                  "or - for stdin")
+    ap.add_argument("block", nargs="?",
+                    help="block file in the textual format, or - for stdin "
+                         "(not needed with --trace-report)")
     ap.add_argument("--models", default=str(REPO / "experiments" / "models"),
                     help="model artifact directory (local mode)")
     ap.add_argument("--connect", metavar="HOST:PORT",
@@ -62,7 +70,25 @@ def main(argv=None) -> int:
                     help="restrict to these uarches (repeatable)")
     ap.add_argument("--json", action="store_true", dest="as_json",
                     help="print raw JSON responses")
+    ap.add_argument("--trace-report", metavar="TRACE",
+                    help="summarize a repro.obs trace file (Chrome JSON or "
+                         "JSONL) instead of predicting a block")
+    ap.add_argument("--top-waves", type=int, default=5, metavar="K",
+                    help="slowest waves to list in --trace-report "
+                         "(default 5)")
     args = ap.parse_args(argv)
+
+    if args.trace_report:
+        from repro.analysis.wave_report import (  # noqa: PLC0415
+            format_wave_report, report_from_file)
+        rep = report_from_file(args.trace_report, top=args.top_waves)
+        if args.as_json:
+            print(json.dumps(rep, indent=1))
+        else:
+            print(format_wave_report(rep))
+        return 0
+    if not args.block:
+        ap.error("a block file is required unless --trace-report is given")
 
     text = (sys.stdin.read() if args.block == "-"
             else Path(args.block).read_text())

@@ -67,6 +67,7 @@ from repro.core.uarch import UArch
 from repro.core.uarch_compile import (F_HAS_SR, F_PRESENT, TEMP_BASE,
                                       CompiledUArch, UopTableIndex,
                                       compile_uarch)
+from repro.obs import tracer as obs
 
 # producer descriptor kinds (recipe-time)
 _P_SNAP, _P_TMP, _P_MEM, _P_CUR = 0, 1, 2, 3
@@ -318,7 +319,20 @@ class BatchSimMachine:
         the lowering cache/recipe memo and the device buffer-slot leasing
         are mutex-guarded — but they serialize on host lowering; the
         intended topology is one caller per machine (campaign workers own
-        distinct machines and overlap only *across* machines)."""
+        distinct machines and overlap only *across* machines).
+
+        With tracing on (``REPRO_TRACE=1``, see :mod:`repro.obs`) each
+        wave emits a ``wave.run_batch`` span with per-phase children
+        (``wave.lower`` / ``wave.pack`` / ``wave.kernel`` /
+        ``wave.dispatch`` / ``wave.extract``), lock-wait spans
+        (``wave.lock_wait`` / ``wave.dispatch_lock_wait``) measured
+        separately from the work they guard, and per-device kernel spans
+        on ``device:<id>`` tracks."""
+        with obs.span("wave.run_batch", lanes=len(codes),
+                      backend=self.backend):
+            return self._run_batch(codes, kernel_lock)
+
+    def _run_batch(self, codes, kernel_lock=None) -> list:
         codes = [list(c) for c in codes]
         out: list = [None] * len(codes)
         # chunk by similar length so short sequences don't pay for the
@@ -344,11 +358,10 @@ class BatchSimMachine:
                     from repro.core.simulator import (  # noqa: PLC0415
                         SimMachine)
                     self._scalar = SimMachine(self.uarch, self.isa)
-            if kernel_lock is not None:
-                with kernel_lock:
-                    for i in thin:
-                        out[i] = self._scalar.run(codes[i])
-            else:
+            # wait_lock(None) degrades to a no-op, so both lock topologies
+            # share one code path; acquisition wait is traced separately
+            with obs.span("wave.scalar", thin=len(thin)), \
+                    obs.wait_lock(kernel_lock, "wave.lock_wait"):
                 for i in thin:
                     out[i] = self._scalar.run(codes[i])
         if not batched:
@@ -356,16 +369,16 @@ class BatchSimMachine:
         progs = self._lower_wave(codes, batched)
         if self.backend == "numpy":
             for c in batched:
-                pk = self._pack_chunk(c, progs)
+                with obs.span("wave.pack", lanes=len(c)):
+                    pk = self._pack_chunk(c, progs)
                 if pk.S == 0:
                     self._fill_empty(c, out)
                     continue
-                if kernel_lock is not None:
-                    with kernel_lock:
-                        done, counts = self._kernel_numpy(pk)
-                else:
+                with obs.wait_lock(kernel_lock, "wave.lock_wait"), \
+                        obs.span("wave.kernel", lanes=pk.E, steps=pk.S):
                     done, counts = self._kernel_numpy(pk)
-                self._extract(pk, done.T, counts, out)
+                with obs.span("wave.extract", lanes=len(c)):
+                    self._extract(pk, done.T, counts, out)
         else:
             self._run_device(batched, progs, out, kernel_lock)
         return out
@@ -380,9 +393,16 @@ class BatchSimMachine:
         longest *missing* count once; shorter unrollings are prefix views
         of the same tensors (causality).  Holds the machine's host lock:
         the cache LRU (pop/reinsert/evict) and the recipe memo are shared
-        mutable state across concurrent ``run_batch`` callers."""
-        with self._host_lock:
-            return self._lower_wave_locked(codes, batched)
+        mutable state across concurrent ``run_batch`` callers.  Traced as
+        a ``wave.lower`` span carrying this wave's cache hit/miss delta."""
+        stats = self.lowering_stats
+        h0, m0 = stats["hits"], stats["misses"]
+        with obs.span("wave.lower",
+                      lanes=sum(len(c) for c in batched)) as sp, \
+                self._host_lock:
+            progs = self._lower_wave_locked(codes, batched)
+            sp.set(hits=stats["hits"] - h0, misses=stats["misses"] - m0)
+        return progs
 
     def _lower_wave_locked(self, codes, batched) -> dict:
         by_id: dict = {}
@@ -942,18 +962,21 @@ class BatchSimMachine:
                     self._fill_empty(c, out)
                     continue
                 jobs = []
-                for sc in dev.shard(c, progs):
-                    S0 = max(progs[i].n_rows for i in sc)
-                    if S0 == 0:    # a shard of all-zero-μop programs
-                        self._fill_empty(sc, out)
-                        continue
-                    R0 = max(max(progs[i].max_r for i in sc), 1)
-                    slot = dev.acquire(S0, len(sc), R0)
-                    pk = self._pack_chunk(sc, progs, bufs=slot.bufs)
-                    jobs.append((pk, slot))
+                with obs.span("wave.pack", lanes=len(c)) as psp:
+                    for sc in dev.shard(c, progs):
+                        S0 = max(progs[i].n_rows for i in sc)
+                        if S0 == 0:    # a shard of all-zero-μop programs
+                            self._fill_empty(sc, out)
+                            continue
+                        R0 = max(max(progs[i].max_r for i in sc), 1)
+                        slot = dev.acquire(S0, len(sc), R0)
+                        pk = self._pack_chunk(sc, progs, bufs=slot.bufs)
+                        jobs.append((pk, slot))
+                    psp.set(shards=len(jobs))
                 if not jobs:
                     continue
-                futs = dev.dispatch(jobs, kernel_lock)
+                with obs.span("wave.dispatch", shards=len(jobs)):
+                    futs = dev.dispatch(jobs, kernel_lock)
                 pending.append((jobs, futs))
                 while len(pending) > 1:
                     self._finalize_device(*pending.popleft(), out)
@@ -975,8 +998,13 @@ class BatchSimMachine:
     def _finalize_device(self, jobs, futs, out) -> None:
         try:
             for (pk, slot), fut in zip(jobs, futs):
-                done, counts = fut.result()  # blocks until the shard ends
-                self._extract(pk, done, counts, out)
+                # result_wait is kernel flight (device time the host spends
+                # blocked on), extract is host gather work — trace them
+                # apart so the report can tell device-bound from host-bound
+                with obs.span("wave.result_wait", lanes=pk.E):
+                    done, counts = fut.result()  # blocks until shard ends
+                with obs.span("wave.extract", lanes=pk.E):
+                    self._extract(pk, done, counts, out)
                 # only now is the slot reusable: _extract read pk.vis,
                 # which aliases the slot's vis buffer — releasing at
                 # dispatch would let a fast same-bucket chunk k+1 re-zero
@@ -1197,6 +1225,7 @@ class _DeviceExec:
         subsets must never serialize each other's kernels."""
         pool = self._get_pool()
         M, P = self.comp.mask_table.shape
+        traced = obs.enabled()
         calls = []
         for pk, slot in jobs:
             E, S = pk.issue.shape
@@ -1210,24 +1239,37 @@ class _DeviceExec:
                 fn, compiled_now = _compiled_kernel(
                     self.kind, S, e_dev, R, M, P, mesh=mesh)
                 lut = self._mesh_lut(n_use)
-                self._record(mesh.devices, (S, e_dev, R), compiled_now,
+                devs = mesh.devices
+                self._record(devs, (S, e_dev, R), compiled_now,
                              pk.E, e_dev)
             else:
                 n_use, e_dev = 1, E
                 fn, compiled_now = _compiled_kernel(self.kind, S, E, R,
                                                     M, P)
                 lut = self.lut
-                self._record(self.devices[:1], (S, E, R), compiled_now,
-                             pk.E, E)
+                devs = self.devices[:1]
+                self._record(devs, (S, E, R), compiled_now, pk.E, E)
             if compiled_now:
                 self.compiles += 1
             self.buckets.add((S, E, R))
             self.kernel_calls += 1
+            # per-device kernel spans: each participating device's track
+            # gets the shard's kernel interval with its real lane share
+            tracks = tuple(
+                (f"device:{d.id}",
+                 max(0, min(pk.E - k * e_dev, e_dev)))
+                for k, d in enumerate(devs)) if traced else ()
             calls.append((fn, (pk.issue, pk.mask, pk.lat, pk.blk, pk.valid,
-                               pk.prod, pk.delta, lut)))
-        with self.dispatch_lock:
-            futs = [pool.submit(_run_kernel, fn, args)
-                    for fn, args in calls]
+                               pk.prod, pk.delta, lut), tracks))
+        with obs.wait_lock(self.dispatch_lock, "wave.dispatch_lock_wait"):
+            # untraced waves keep the legacy 2-arg call (tests monkeypatch
+            # _run_kernel with that signature to inject kernel failures)
+            if traced:
+                futs = [pool.submit(_run_kernel, fn, args, tracks)
+                        for fn, args, tracks in calls]
+            else:
+                futs = [pool.submit(_run_kernel, fn, args)
+                        for fn, args, _ in calls]
         # the slots stay leased: ``_finalize_device`` releases them only
         # after extraction, which reads the slots' vis buffers
         return futs
@@ -1267,12 +1309,26 @@ def _abort_jobs(jobs, futs) -> None:
         slot.release()
 
 
-def _run_kernel(fn, args):
+def _run_kernel(fn, args, tracks=()):
     """Pool worker: execute one compiled shard kernel and realize its
     outputs on the host (so finalization only touches host arrays; the
-    packing buffers themselves stay leased until extraction)."""
+    packing buffers themselves stay leased until extraction).
+
+    ``tracks`` — when tracing is on — attributes the kernel interval to
+    every participating device's ``device:<id>`` trace track with that
+    device's real lane share (how per-device timelines and imbalance
+    appear in the wave report)."""
+    if not tracks:
+        done, counts = fn(*args)
+        return np.asarray(done), np.asarray(counts)
+    import time  # noqa: PLC0415
+    t0 = time.perf_counter_ns()
     done, counts = fn(*args)
-    return np.asarray(done), np.asarray(counts)
+    out = np.asarray(done), np.asarray(counts)
+    dur = time.perf_counter_ns() - t0
+    for label, lanes in tracks:
+        obs.emit_span("wave.kernel", t0, dur, track=label, lanes=lanes)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -1321,7 +1377,8 @@ def _compiled_kernel(kind: str, S: int, E: int, R: int, M: int, P: int,
         hit = _EXEC_CACHE.get(key)      # double-check under the lock
         if hit is not None:
             return hit, False
-        return _compile_kernel(jax, kind, key, mesh), True
+        with obs.span("wave.compile", backend=kind, bucket=list(key[1:6])):
+            return _compile_kernel(jax, kind, key, mesh), True
 
 
 def _compile_kernel(jax, kind, key, mesh=None):

@@ -44,6 +44,7 @@ from repro.core.plan import (Fork, MeasurementPlan, SchedulerStats,
 from repro.core.port_usage import PortUsage, port_usage_plan
 from repro.core.throughput import (ThroughputResult, computed_throughput,
                                    throughput_plan)
+from repro.obs import tracer as obs
 
 
 @dataclass
@@ -178,6 +179,16 @@ def characterize(machine, isa: ISA, instr_names=None,
                          "would carry the wrong uarch/fingerprint)")
     stats0 = engine.stats.as_dict()
     t0 = time.time()
+    with obs.span("characterize", uarch=engine.machine.name,
+                  sequential=sequential) as span:
+        return _run_characterize(engine, isa, instr_names, blocking,
+                                 scheduler, sequential, cancel,
+                                 execute_lock, stats0, t0, span)
+
+
+def _run_characterize(engine, isa, instr_names, blocking, scheduler,
+                      sequential, cancel, execute_lock, stats0, t0,
+                      span) -> PerfModel:
     plan = characterize_plan(isa, instr_names, blocking,
                              n_ports=len(engine.machine.ports))
     if sequential:
@@ -220,4 +231,7 @@ def characterize(machine, isa: ISA, instr_names=None,
     hits = (model.engine_stats["cache_hits"]
             + model.engine_stats["dedup_hits"])
     model.engine_stats["hit_rate"] = round(hits / max(1, req), 4)
+    span.set(instructions=len(model.instructions),
+             waves=model.wave_stats.get("waves", 0),
+             hit_rate=model.engine_stats["hit_rate"])
     return model

@@ -49,6 +49,8 @@ from __future__ import annotations
 import os
 import threading
 
+from repro.obs import tracer as obs
+
 # user-facing device-count knob (int or "all"); unset means "all available"
 ENV_DEVICES = "REPRO_SIM_DEVICES"
 
@@ -133,7 +135,10 @@ def lane_mesh(devices) -> LaneMesh:
     with _REGISTRY_LOCK:
         m = _MESHES.get(key)
         if m is None:
-            m = _MESHES[key] = LaneMesh(devices)
+            # mesh construction is the one-time cost worth seeing in a
+            # trace (NamedSharding setup ahead of kernel compilation)
+            with obs.span("mesh.build", devices=list(key)):
+                m = _MESHES[key] = LaneMesh(devices)
         return m
 
 
@@ -162,8 +167,15 @@ def partition(devices, n_groups: int) -> list:
         return []
     d = len(devices)
     if d == 0:
-        return [() for _ in range(n_groups)]
-    if d >= n_groups:
-        return [devices[i * d // n_groups:(i + 1) * d // n_groups]
-                for i in range(n_groups)]
-    return [(devices[i % d],) for i in range(n_groups)]
+        groups = [() for _ in range(n_groups)]
+    elif d >= n_groups:
+        groups = [devices[i * d // n_groups:(i + 1) * d // n_groups]
+                  for i in range(n_groups)]
+    else:
+        groups = [(devices[i % d],) for i in range(n_groups)]
+    if obs.enabled():
+        # placement ids are trace-only; tests pass plain ints as devices
+        obs.instant("mesh.partition", devices=d, groups=n_groups,
+                    placement=[[getattr(dev, "id", dev) for dev in g]
+                               for g in groups])
+    return groups

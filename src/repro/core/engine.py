@@ -55,6 +55,7 @@ from concurrent.futures import ThreadPoolExecutor, as_completed
 from dataclasses import dataclass, field
 
 from repro.core.simulator import Counters, Instr
+from repro.obs import tracer as obs
 
 # Algorithm 2 protocol defaults: the two unroll counts whose difference
 # cancels the constant measurement-harness overhead.
@@ -166,16 +167,37 @@ class EngineStats:
     def hit_rate(self) -> float:
         return (self.cache_hits + self.dedup_hits) / max(1, self.requests)
 
+    def to_registry(self, reg=None):
+        """Publish these stats as canonical ``engine.*`` instruments on a
+        :class:`repro.obs.metrics.MetricsRegistry` (see
+        ``repro.obs.metrics.ENGINE_ALIASES`` for the legacy-key mapping)."""
+        from repro.obs import metrics as obs_metrics  # noqa: PLC0415
+        if reg is None:
+            reg = obs_metrics.MetricsRegistry()
+        reg.gauge("engine.requests").set(self.requests)
+        reg.gauge("engine.cache.hits").set(self.cache_hits)
+        reg.gauge("engine.cache.dedup_hits").set(self.dedup_hits)
+        reg.gauge("engine.executions").set(self.executions)
+        reg.gauge("engine.machine_runs").set(self.machine_runs)
+        reg.gauge("engine.batches").set(self.batches)
+        reg.gauge("engine.cache.evictions").set(self.evictions)
+        reg.gauge("engine.lowering.hits").set(self.lowering_hits)
+        reg.gauge("engine.lowering.misses").set(self.lowering_misses)
+        reg.gauge("engine.lowering.evictions").set(self.lowering_evictions)
+        reg.gauge("engine.cache.hit_rate").set(round(self.hit_rate, 4))
+        if self.device:
+            obs_metrics.absorb_device_stats(reg, self.device)
+        return reg
+
     def as_dict(self) -> dict:
-        return {"requests": self.requests, "cache_hits": self.cache_hits,
-                "dedup_hits": self.dedup_hits, "executions": self.executions,
-                "machine_runs": self.machine_runs, "batches": self.batches,
-                "evictions": self.evictions,
-                "lowering_hits": self.lowering_hits,
-                "lowering_misses": self.lowering_misses,
-                "lowering_evictions": self.lowering_evictions,
-                "hit_rate": round(self.hit_rate, 4),
-                "device": dict(self.device)}
+        """The legacy flat stats shape, now *derived from* the canonical
+        metrics registry: every key here is a documented alias of an
+        ``engine.*`` instrument (``repro.obs.metrics.ENGINE_ALIASES``);
+        ``device`` carries the backend's nested telemetry verbatim."""
+        from repro.obs import metrics as obs_metrics  # noqa: PLC0415
+        out = obs_metrics.legacy_engine_dict(self.to_registry())
+        out["device"] = dict(self.device)
+        return out
 
 
 def _takes_kernel_lock(fn) -> bool:
@@ -211,13 +233,15 @@ def machine_run_batch(machine, codes, kernel_lock=None) -> list[Counters]:
     run_batch = getattr(machine, "run_batch", None)
     if run_batch is not None:
         if kernel_lock is not None and not _takes_kernel_lock(run_batch):
-            with kernel_lock:
+            # legacy machine: whole wave under the lock (wait time traced
+            # separately so cross-engine contention is visible)
+            with obs.wait_lock(kernel_lock, "wave.lock_wait"):
                 return run_batch(codes)
         if kernel_lock is not None:
             return run_batch(codes, kernel_lock=kernel_lock)
         return run_batch(codes)
     if kernel_lock is not None:
-        with kernel_lock:
+        with obs.wait_lock(kernel_lock, "wave.lock_wait"):
             return [machine.run(list(c)) for c in codes]
     return [machine.run(list(c)) for c in codes]
 
@@ -258,29 +282,39 @@ class MeasurementEngine:
         :func:`machine_run_batch`)."""
         experiments = list(experiments)
         uarch = self.machine.name
-        keys = [e.cache_key(uarch) for e in experiments]
-        with self._lock:
-            self.stats.requests += len(experiments)
-            self.stats.batches += 1
-            if not self.enabled:
-                return self._execute_wave(experiments, kernel_lock)
-            todo: dict[str, Experiment] = {}
-            resolved: dict[str, Counters] = {}
-            for e, k in zip(experiments, keys):
-                if k in self.cache:
-                    self.stats.cache_hits += 1
-                    resolved[k] = self.cache[k] = self.cache.pop(k)  # touch
-                elif k in todo:
-                    self.stats.dedup_hits += 1
-                else:
-                    todo[k] = e
-            if todo:
-                for k, c in zip(todo,
-                                self._execute_wave(todo.values(),
-                                                   kernel_lock)):
-                    resolved[k] = c
-                    self._store(k, c)
-            return [self._copy(resolved[k]) for k in keys]
+        with obs.span("engine.submit", uarch=uarch,
+                      wave=len(experiments)) as sp:
+            keys = [e.cache_key(uarch) for e in experiments]
+            with self._lock:
+                self.stats.requests += len(experiments)
+                self.stats.batches += 1
+                if not self.enabled:
+                    with obs.span("engine.miss_wave",
+                                  misses=len(experiments)):
+                        return self._execute_wave(experiments, kernel_lock)
+                todo: dict[str, Experiment] = {}
+                resolved: dict[str, Counters] = {}
+                with obs.span("engine.cache_probe", wave=len(experiments)):
+                    for e, k in zip(experiments, keys):
+                        if k in self.cache:
+                            self.stats.cache_hits += 1
+                            resolved[k] = self.cache[k] = \
+                                self.cache.pop(k)  # touch
+                        elif k in todo:
+                            self.stats.dedup_hits += 1
+                        else:
+                            todo[k] = e
+                sp.set(hits=len(experiments) - len(todo), misses=len(todo))
+                if todo:
+                    with obs.span("engine.miss_wave", misses=len(todo)):
+                        for k, c in zip(todo,
+                                        self._execute_wave(todo.values(),
+                                                           kernel_lock)):
+                            resolved[k] = c
+                            self._store(k, c)
+                obs.counter("engine.hit_rate",
+                            round(self.stats.hit_rate, 4))
+                return [self._copy(resolved[k]) for k in keys]
 
     def _store(self, key: str, c: Counters) -> None:
         self.cache[key] = c
@@ -427,27 +461,37 @@ class Campaign:
         from repro.core.characterize import characterize  # noqa: PLC0415
 
         engine = as_engine(machine)
-        if self.cache_dir is not None:
-            path = self._cache_path(machine.name)
-            if path.exists():
-                try:
-                    engine.cache.update(model_io.load_measurement_cache(
-                        path, expect_fingerprint=machine_fingerprint(machine)))
-                except (ValueError, KeyError, OSError) as e:
-                    # a cache is disposable: corruption or a changed machine
-                    # means cold, not dead (the save below rewrites it)
-                    import warnings  # noqa: PLC0415
-                    warnings.warn(f"ignoring unusable measurement cache "
-                                  f"{path}: {e}", stacklevel=2)
-        # thread CPU time: under the GIL the machines' threads interleave,
-        # so wall clock per uarch would just re-measure the whole campaign
-        t0 = time.thread_time()
-        model = characterize(engine, isa, self.instr_names, cancel=cancel,
-                             execute_lock=execute_lock)
-        dt = time.thread_time() - t0
-        if self.cache_dir is not None:
-            model_io.save_measurement_cache(self._cache_path(machine.name),
-                                            engine)
+        with obs.span("campaign.worker", uarch=machine.name) as sp:
+            if self.cache_dir is not None:
+                path = self._cache_path(machine.name)
+                if path.exists():
+                    try:
+                        with obs.span("campaign.cache_load",
+                                      uarch=machine.name):
+                            engine.cache.update(
+                                model_io.load_measurement_cache(
+                                    path, expect_fingerprint=
+                                    machine_fingerprint(machine)))
+                    except (ValueError, KeyError, OSError) as e:
+                        # a cache is disposable: corruption or a changed
+                        # machine means cold, not dead (the save below
+                        # rewrites it)
+                        import warnings  # noqa: PLC0415
+                        warnings.warn(f"ignoring unusable measurement cache "
+                                      f"{path}: {e}", stacklevel=2)
+            # thread CPU time: under the GIL the machines' threads
+            # interleave, so wall clock per uarch would just re-measure the
+            # whole campaign
+            t0 = time.thread_time()
+            model = characterize(engine, isa, self.instr_names, cancel=cancel,
+                                 execute_lock=execute_lock)
+            dt = time.thread_time() - t0
+            sp.set(cpu_s=round(dt, 3),
+                   instructions=len(model.instructions))
+            if self.cache_dir is not None:
+                with obs.span("campaign.cache_save", uarch=machine.name):
+                    model_io.save_measurement_cache(
+                        self._cache_path(machine.name), engine)
         return model, engine, dt
 
     def run(self, machines, isa) -> CampaignResult:
@@ -495,7 +539,9 @@ class Campaign:
         # locks instead, so the disjoint placement above actually overlaps
         cancel = threading.Event()
         execute_lock = threading.Lock()
-        with ThreadPoolExecutor(max_workers=workers) as pool:
+        with obs.span("campaign.run", machines=len(machines),
+                      workers=workers), \
+                ThreadPoolExecutor(max_workers=workers) as pool:
             futures = {pool.submit(self._run_one, m, isa, cancel,
                                    execute_lock): m.name
                        for m in machines}

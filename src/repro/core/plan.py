@@ -56,6 +56,7 @@ from collections import deque
 from dataclasses import dataclass, field
 
 from repro.core.engine import as_engine
+from repro.obs import tracer as obs
 
 
 class PlanCancelled(RuntimeError):
@@ -187,7 +188,12 @@ class WaveScheduler:
 
     # -- public entry points -----------------------------------------------
     def run(self, plans) -> list:
-        """Drive ``plans`` to completion; returns their results in order."""
+        """Drive ``plans`` to completion; returns their results in order.
+
+        Each scheduler round emits two trace spans when tracing is on
+        (``REPRO_TRACE=1``): ``scheduler.drain`` around the plan-stepping
+        sweep and ``scheduler.execute`` around the fused wave (see
+        :mod:`repro.obs`)."""
         plans = list(plans)
         results: list = [None] * len(plans)
         ready: deque[_Task] = deque(
@@ -195,15 +201,21 @@ class WaveScheduler:
             for i, p in enumerate(plans))
         blocked: list[tuple[_Task, list]] = []
         live: set[_Task] = set(ready)
+        rounds = 0
         try:
-            while ready or blocked:
-                if self.cancel is not None and self.cancel.is_set():
-                    raise PlanCancelled("measurement campaign cancelled")
-                while ready:
-                    self._step(ready.popleft(), ready, blocked, results, live)
-                if blocked:
-                    self._execute(blocked, ready)
-                    blocked = []
+            with obs.span("scheduler.run", plans=len(plans)) as sp:
+                while ready or blocked:
+                    if self.cancel is not None and self.cancel.is_set():
+                        raise PlanCancelled("measurement campaign cancelled")
+                    rounds += 1
+                    with obs.span("scheduler.drain", plans=len(ready)):
+                        while ready:
+                            self._step(ready.popleft(), ready, blocked,
+                                       results, live)
+                    if blocked:
+                        self._execute(blocked, ready)
+                        blocked = []
+                sp.set(rounds=rounds, waves=self.stats.waves)
         except BaseException:
             for t in live:
                 try:
@@ -267,15 +279,20 @@ class WaveScheduler:
             ready.append(parent)
 
     def _execute(self, blocked, ready) -> None:
-        wave: list = []
-        for _, batch in blocked:
-            wave.extend(batch)
+        with obs.span("scheduler.fuse", plans=len(blocked)):
+            wave: list = []
+            for _, batch in blocked:
+                wave.extend(batch)
+        obs.counter("scheduler.wave_width", len(wave))
         t0 = time.perf_counter()
         # the shared lock travels down to the machine as a *kernel* lock:
         # only kernel execution serializes across schedulers; this
         # scheduler's host lowering/packing overlaps a sibling's kernel
         # (double-buffered async dispatch in the batched backend)
-        counters = self.engine.submit(wave, kernel_lock=self.execute_lock)
+        with obs.span("scheduler.execute", wave=len(wave),
+                      plans=len(blocked)):
+            counters = self.engine.submit(wave,
+                                          kernel_lock=self.execute_lock)
         dt = time.perf_counter() - t0
         self.stats.record(len(wave))
         off = 0

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs import tracer as obs
 from repro.core.characterize import PerfModel
 from repro.core.isa import ISA
 from repro.core.lp import CUT_COMBO_CAP, port_bound_from_usage, union_closure
@@ -95,14 +96,18 @@ class BatchPredictor:
                              "(BatchPredictor(..., machine=...))")
         from repro.core.engine import Experiment, as_engine  # noqa: PLC0415
 
-        if devices is not None:
-            setter = getattr(self.machine, "set_devices", None)
-            if setter is not None:
-                setter(devices)
-        engine = as_engine(self.machine)
-        res = engine.submit([Experiment.of(b) for b in blocks],
-                            kernel_lock=kernel_lock)
-        return [c.cycles for c in res]
+        blocks = list(blocks)
+        # the span inherits the serving request's trace_id when called
+        # from a traced server thread (see repro.obs.tracer)
+        with obs.span("predict.simulate", blocks=len(blocks)):
+            if devices is not None:
+                setter = getattr(self.machine, "set_devices", None)
+                if setter is not None:
+                    setter(devices)
+            engine = as_engine(self.machine)
+            res = engine.submit([Experiment.of(b) for b in blocks],
+                                kernel_lock=kernel_lock)
+            return [c.cycles for c in res]
 
     def predict_batch(self, blocks, on_error: str = "raise") -> list:
         """Predictions for many blocks in one pass.
@@ -110,8 +115,16 @@ class BatchPredictor:
         ``on_error="raise"`` raises :class:`UnknownInstructionError` for the
         first block referencing uncharacterized instructions;
         ``on_error="return"`` yields the exception object in that block's
-        slot instead (the service's per-request structured errors)."""
+        slot instead (the service's per-request structured errors).
+
+        Traced as a ``predict.batch`` span (inheriting the serving
+        request's ``trace_id`` when reached from a traced server
+        thread)."""
         codes = [list(b) for b in blocks]
+        with obs.span("predict.batch", blocks=len(codes)):
+            return self._predict_batch(codes, on_error)
+
+    def _predict_batch(self, codes, on_error: str) -> list:
         errors: dict[int, UnknownInstructionError] = {}
         for i, code in enumerate(codes):
             try:

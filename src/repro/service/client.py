@@ -63,6 +63,11 @@ class ServiceClient:
     def stats(self) -> dict:
         return self._unwrap(self._call({"op": "stats"}))
 
+    def metrics(self) -> dict:
+        """Canonical metrics snapshot (``{name: {"type": ..., ...}}``, see
+        :mod:`repro.obs.metrics`); ``stats()`` keeps the legacy shape."""
+        return self._unwrap(self._call({"op": "metrics"}))
+
     def reload(self, uarch: str | None = None) -> list[str]:
         msg = {"op": "reload"}
         if uarch is not None:

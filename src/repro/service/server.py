@@ -15,21 +15,47 @@ ThreadingTCPServer speaking the newline-delimited JSON protocol
 (``protocol.py``). Endpoints: predict, predict_batch, uarches, stats,
 reload, ping. Per-endpoint stats (request counts, error counts, cache hit
 rate, p50/p99 latency, coalesced batch sizes) are served by ``stats``.
+
+Observability (see :mod:`repro.obs`): every prediction request gets a
+**trace id** (returned as ``trace_id`` in the response envelope and
+attached to the request's spans, so a slow client request can be found in
+a Perfetto trace); per-endpoint latency reservoirs are backed by
+:class:`repro.obs.metrics.Histogram` instruments (``metrics()`` returns
+the canonical registry snapshot, ``stats()`` keeps the legacy shape);
+``REPRO_ACCESS_LOG=path`` appends one JSON access record per request
+(trace id, endpoint, batch size, cache hits, wall µs), and requests over
+the ``REPRO_SLOW_REQUEST_US`` budget are logged at WARNING.
 """
 from __future__ import annotations
 
+import json
+import logging
+import os
 import queue
 import socketserver
 import threading
 import time
+import uuid
 from collections import OrderedDict, deque
 from concurrent.futures import Future
 
 from repro.core.isa import TEST_ISA
 from repro.core.predictor import UnknownInstructionError, missing_specs
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracer as obs
 from repro.service import protocol
 from repro.service.batch_predictor import BatchPredictor
 from repro.service.registry import ModelRegistry
+
+_LOG = logging.getLogger("repro.service")
+
+#: env knobs for the access log and the slow-request WARNING budget
+ENV_ACCESS_LOG = "REPRO_ACCESS_LOG"
+ENV_SLOW_US = "REPRO_SLOW_REQUEST_US"
+
+
+def _new_trace_id() -> str:
+    return uuid.uuid4().hex[:16]
 
 
 class LRUCache:
@@ -89,40 +115,46 @@ class LRUCache:
 
 
 class EndpointStats:
-    """Counts + bounded latency reservoir with p50/p99 summaries."""
+    """Per-endpoint latency/error accounting, backed by the metrics layer.
 
-    def __init__(self, keep: int = 4096):
-        self.requests = 0
-        self.errors = 0
-        self._lat = deque(maxlen=keep)
-        self._lock = threading.Lock()
+    The reservoir is a :class:`repro.obs.metrics.Histogram` (newest 4096
+    observations, like the deque it replaced) plus an error
+    :class:`~repro.obs.metrics.Counter`; :meth:`summary` renders the
+    legacy shape (``requests``/``errors``/``p50_us``/``p99_us`` — see
+    ``repro.obs.metrics.ENDPOINT_ALIASES``) from the instruments, so the
+    histogram is the single source of truth."""
+
+    def __init__(self, keep: int = 4096, name: str = "endpoint"):
+        self.latency = obs_metrics.Histogram(f"{name}.latency_s", keep=keep)
+        self._errors = obs_metrics.Counter(f"{name}.errors")
+
+    @property
+    def requests(self) -> int:
+        return self.latency.count
+
+    @property
+    def errors(self) -> int:
+        return self._errors.value
 
     def observe(self, seconds: float, *, error: bool = False) -> None:
-        with self._lock:
-            self.requests += 1
-            self.errors += int(error)
-            self._lat.append(seconds)
+        self.latency.observe(seconds)
+        if error:
+            self._errors.inc()
 
     def observe_many(self, seconds_each: float, n: int, errors: int) -> None:
-        """n requests that shared one batched pass, one lock acquisition."""
-        with self._lock:
-            self.requests += n
-            self.errors += errors
-            self._lat.extend([seconds_each] * n)
-
-    @staticmethod
-    def _pct(vals: list, q: float) -> float:
-        idx = min(len(vals) - 1, max(0, round(q * (len(vals) - 1))))
-        return vals[idx]
+        """n requests that shared one batched pass."""
+        for _ in range(n):
+            self.latency.observe(seconds_each)
+        if errors:
+            self._errors.inc(errors)
 
     def summary(self) -> dict:
-        with self._lock:
-            vals = sorted(self._lat)
-            out = {"requests": self.requests, "errors": self.errors}
-            if vals:
-                out["p50_us"] = round(self._pct(vals, 0.50) * 1e6, 1)
-                out["p99_us"] = round(self._pct(vals, 0.99) * 1e6, 1)
-            return out
+        snap = self.latency.snapshot()
+        out = {"requests": snap["count"], "errors": self._errors.value}
+        if snap["count"]:
+            out["p50_us"] = round(snap["p50"] * 1e6, 1)
+            out["p99_us"] = round(snap["p99"] * 1e6, 1)
+        return out
 
 
 class _Coalescer:
@@ -216,18 +248,24 @@ class _Coalescer:
             self.batches += 1
             self.batch_sizes.append(len(batch))
             groups: dict[str, list] = {}
-            for uarch, code, fut in batch:
-                groups.setdefault(uarch, []).append((code, fut))
+            for uarch, code, fut, tid in batch:
+                groups.setdefault(uarch, []).append((code, fut, tid))
             for uarch, entries in groups.items():
-                codes = [c for c, _ in entries]
+                codes = [c for c, _, _ in entries]
+                tids = [t for _, _, t in entries]
                 try:
-                    results = self.service._serve_group(uarch, codes)
+                    results, hits = self.service._serve_group(
+                        uarch, codes, trace_ids=tids)
                 except Exception as e:  # noqa: BLE001 - the worker thread
                     # must survive anything (a dead coalescer hangs every
                     # future client); unexpected errors become responses
                     err = {"ok": False, "error": protocol.error_to_dict(e)}
-                    results = [err] * len(entries)
-                for (_, fut), res in zip(entries, results):
+                    results, hits = [err] * len(entries), [False] * len(entries)
+                for (_, fut, _), res, hit in zip(entries, results, hits):
+                    # the cache-hit flag rides the future (the shared
+                    # envelope must not be mutated per-request); predict()
+                    # reads it for the access log
+                    fut.cache_hit = hit
                     if not fut.done():
                         fut.set_result(res)
 
@@ -246,7 +284,8 @@ class PredictionService:
     def __init__(self, registry: ModelRegistry, isa=None, *,
                  issue_width: int = 4, cache_size: int = 4096,
                  max_batch: int = 64, batch_window_s: float = 0.0,
-                 start: bool = True):
+                 start: bool = True, access_log=None,
+                 slow_request_us: float | None = None):
         self.registry = registry
         self.isa = isa if isa is not None else TEST_ISA
         self.issue_width = issue_width
@@ -257,6 +296,18 @@ class PredictionService:
         self._plock = threading.Lock()
         self.coalescer = _Coalescer(self, max_batch, batch_window_s)
         self.started = time.time()
+        # access log (newline-JSON, one record per request) and the
+        # slow-request WARNING budget; constructor args override the
+        # REPRO_ACCESS_LOG / REPRO_SLOW_REQUEST_US env knobs
+        if access_log is None:
+            access_log = os.environ.get(ENV_ACCESS_LOG) or None
+        if slow_request_us is None:
+            env = os.environ.get(ENV_SLOW_US, "").strip()
+            slow_request_us = float(env) if env else None
+        self.access_log_path = access_log
+        self.slow_request_us = slow_request_us
+        self._access_fh = None
+        self._access_lock = threading.Lock()
         if start:
             self.start()
 
@@ -266,6 +317,33 @@ class PredictionService:
 
     def close(self) -> None:
         self.coalescer.stop()
+        with self._access_lock:
+            if self._access_fh is not None:
+                self._access_fh.close()
+                self._access_fh = None
+
+    # -- access log / slow-request flagging --------------------------------
+    def _access(self, endpoint: str, trace_id: str, batch: int,
+                cache_hits: int, wall_s: float, ok: bool) -> None:
+        """One access record per served request (or per explicit batch):
+        appended as newline-JSON when ``REPRO_ACCESS_LOG`` is set, and
+        escalated to a WARNING when the request exceeded the configured
+        latency budget."""
+        wall_us = round(wall_s * 1e6, 1)
+        if self.access_log_path is not None:
+            rec = {"ts": round(time.time(), 3), "trace_id": trace_id,
+                   "endpoint": endpoint, "batch": batch,
+                   "cache_hits": cache_hits, "wall_us": wall_us, "ok": ok}
+            line = json.dumps(rec, sort_keys=True)
+            with self._access_lock:
+                if self._access_fh is None:
+                    self._access_fh = open(self.access_log_path, "a",
+                                           buffering=1)
+                self._access_fh.write(line + "\n")
+        if self.slow_request_us is not None and wall_us > self.slow_request_us:
+            _LOG.warning("slow request trace_id=%s endpoint=%s batch=%d "
+                         "wall_us=%.1f (budget %.1f)", trace_id, endpoint,
+                         batch, wall_us, self.slow_request_us)
 
     def __enter__(self):
         return self
@@ -285,52 +363,65 @@ class PredictionService:
             return self._predictors[uarch]
 
     # -- core serving ------------------------------------------------------
-    def _serve_group(self, uarch: str, codes: list) -> list[dict]:
+    def _serve_group(self, uarch: str, codes: list,
+                     trace_ids=None) -> tuple[list, list]:
         """Answer many blocks for one uarch: cache lookups, one batched
-        predictor pass over the misses, structured errors per block."""
-        try:
-            version, bp = self._predictor(uarch)
-        except Exception as e:  # noqa: BLE001 - registry/artifact failures
-            # (missing model, stale fingerprint, XML ParseError from a
-            # half-written artifact, races with file deletion...) must come
-            # back as structured errors, never escape into the worker
-            err = {"ok": False, "error": protocol.error_to_dict(e)}
-            return [err] * len(codes)
-        keys = [(version, protocol.block_key(uarch, c)) for c in codes]
-        out: list = [None] * len(codes)
-        unique: dict = {}   # key -> first index needing computation
-        dups: dict = {}     # index -> representative index
-        hits = self.cache.get_many(keys)
-        for i, (k, hit) in enumerate(zip(keys, hits)):
-            if hit is not None:
-                out[i] = hit
-            elif k in unique:
-                dups[i] = unique[k]  # identical in-flight request: compute once
-            else:
-                unique[k] = i
-        if dups:
-            with self._plock:
-                self.dedup_hits += len(dups)
-        if unique:
-            miss_idx = list(unique.values())
-            results = bp.predict_batch([codes[i] for i in miss_idx],
-                                       on_error="return")
-            for i, res in zip(miss_idx, results):
-                if isinstance(res, UnknownInstructionError):
-                    out[i] = {"ok": False,
-                              "error": protocol.error_to_dict(res)}
+        predictor pass over the misses, structured errors per block.
+        Returns ``(results, cache_hit_flags)``.  Traced as a
+        ``server.serve_group`` span carrying the request trace ids; the
+        first id is set as ``trace_id`` so nested batch-predictor spans on
+        this thread inherit it."""
+        with obs.span("server.serve_group", uarch=uarch, batch=len(codes),
+                      trace_id=(trace_ids[0] if trace_ids else None),
+                      trace_ids=list(trace_ids or ())) as sp:
+            try:
+                version, bp = self._predictor(uarch)
+            except Exception as e:  # noqa: BLE001 - registry/artifact
+                # failures (missing model, stale fingerprint, XML
+                # ParseError from a half-written artifact, races with file
+                # deletion...) must come back as structured errors, never
+                # escape into the worker
+                err = {"ok": False, "error": protocol.error_to_dict(e)}
+                return [err] * len(codes), [False] * len(codes)
+            keys = [(version, protocol.block_key(uarch, c)) for c in codes]
+            out: list = [None] * len(codes)
+            unique: dict = {}   # key -> first index needing computation
+            dups: dict = {}     # index -> representative index
+            hits = self.cache.get_many(keys)
+            for i, (k, hit) in enumerate(zip(keys, hits)):
+                if hit is not None:
+                    out[i] = hit
+                elif k in unique:
+                    dups[i] = unique[k]  # identical in-flight request:
+                    # compute once
                 else:
-                    out[i] = {"ok": True, "uarch": uarch,
-                              "result": protocol.prediction_to_dict(res)}
-                    self.cache.put(keys[i], out[i])
-        for i, rep in dups.items():
-            out[i] = out[rep]
-        return out
+                    unique[k] = i
+            if dups:
+                with self._plock:
+                    self.dedup_hits += len(dups)
+            sp.set(cache_hits=len(codes) - len(unique) - len(dups),
+                   misses=len(unique))
+            if unique:
+                miss_idx = list(unique.values())
+                results = bp.predict_batch([codes[i] for i in miss_idx],
+                                           on_error="return")
+                for i, res in zip(miss_idx, results):
+                    if isinstance(res, UnknownInstructionError):
+                        out[i] = {"ok": False,
+                                  "error": protocol.error_to_dict(res)}
+                    else:
+                        out[i] = {"ok": True, "uarch": uarch,
+                                  "result": protocol.prediction_to_dict(res)}
+                        self.cache.put(keys[i], out[i])
+            for i, rep in dups.items():
+                out[i] = out[rep]
+            return out, [h is not None for h in hits]
 
     def _stats_for(self, endpoint: str) -> EndpointStats:
         st = self.endpoints.get(endpoint)
         if st is None:
-            st = self.endpoints.setdefault(endpoint, EndpointStats())
+            st = self.endpoints.setdefault(
+                endpoint, EndpointStats(name=f"server.endpoint.{endpoint}"))
         return st
 
     # -- public API --------------------------------------------------------
@@ -352,29 +443,50 @@ class PredictionService:
     def submit(self, uarch: str, code) -> Future:
         """Enqueue one block for coalesced prediction. The future resolves
         once a worker is running (``start()``); on ``close()`` pending
-        futures resolve to a structured ServiceClosed error."""
+        futures resolve to a structured ServiceClosed error.  Each submit
+        gets a fresh trace id, carried on the returned future as
+        ``fut.trace_id`` and into the serving spans."""
         fut: Future = Future()
-        self.coalescer.submit((uarch, list(code), fut))
+        fut.trace_id = _new_trace_id()
+        fut.cache_hit = False
+        self.coalescer.submit((uarch, list(code), fut, fut.trace_id))
         return fut
 
     def predict(self, uarch: str, code) -> dict:
         t0 = time.perf_counter()
-        res = self.submit(uarch, code).result()
-        self._stats_for("predict").observe(time.perf_counter() - t0,
-                                           error=not res.get("ok"))
-        return self._copy_env(res)
+        fut = self.submit(uarch, code)
+        with obs.span("server.predict", uarch=uarch,
+                      trace_id=fut.trace_id):
+            res = fut.result()
+        dt = time.perf_counter() - t0
+        self._stats_for("predict").observe(dt, error=not res.get("ok"))
+        self._access("predict", fut.trace_id, 1, int(fut.cache_hit), dt,
+                     bool(res.get("ok")))
+        out = self._copy_env(res)
+        out["trace_id"] = fut.trace_id
+        return out
 
     def predict_batch(self, uarch: str, blocks) -> list[dict]:
         """Explicitly batched path (one request, many blocks): bypasses the
-        coalescing queue but shares cache and predictors."""
+        coalescing queue but shares cache and predictors.  The whole batch
+        shares one trace id (returned in every envelope) and one access
+        record."""
         t0 = time.perf_counter()
+        tid = _new_trace_id()
         blocks = [list(b) for b in blocks]
-        out = self._serve_group(uarch, blocks)
+        with obs.span("server.predict_batch", uarch=uarch,
+                      batch=len(blocks), trace_id=tid):
+            out, hits = self._serve_group(uarch, blocks, trace_ids=[tid])
         dt = time.perf_counter() - t0
         per = dt / max(1, len(blocks))
         self._stats_for("predict_batch").observe_many(
             per, len(out), sum(1 for r in out if not r.get("ok")))
-        return [self._copy_env(r) for r in out]
+        self._access("predict_batch", tid, len(blocks), sum(hits), dt,
+                     all(r.get("ok") for r in out) if out else True)
+        copies = [self._copy_env(r) for r in out]
+        for c in copies:
+            c["trace_id"] = tid
+        return copies
 
     def uarches(self) -> list[str]:
         return self.registry.uarches()
@@ -387,6 +499,9 @@ class PredictionService:
         return missing_specs(self.registry.get(uarch).model, code)
 
     def stats(self) -> dict:
+        """The legacy nested stats shape (kept verbatim — clients and
+        benches pin it); every numeric field is also exposed canonically
+        through :meth:`metrics`."""
         return {
             "uptime_s": round(time.time() - self.started, 1),
             "endpoints": {k: v.summary()
@@ -395,6 +510,18 @@ class PredictionService:
             "coalescer": self.coalescer.stats(),
             "registry": self.registry.stats(),
         }
+
+    def metrics(self) -> dict:
+        """Canonical :class:`~repro.obs.metrics.MetricsRegistry` snapshot
+        of the service: the per-endpoint latency histograms (the live
+        instruments behind :class:`EndpointStats`) plus every numeric
+        field of :meth:`stats` as ``server.*`` gauges."""
+        reg = obs_metrics.MetricsRegistry()
+        obs_metrics.absorb_server_stats(reg, self.stats())
+        snap = reg.snapshot()
+        for ep, st in list(self.endpoints.items()):
+            snap[f"server.endpoint.{ep}.latency_s"] = st.latency.snapshot()
+        return snap
 
 
 # ---------------------------------------------------------------------------
@@ -431,6 +558,8 @@ class _Handler(socketserver.StreamRequestHandler):
             return {"ok": True, "result": service.uarches()}
         if op == "stats":
             return {"ok": True, "result": service.stats()}
+        if op == "metrics":
+            return {"ok": True, "result": service.metrics()}
         if op == "reload":
             return {"ok": True,
                     "result": service.reload(msg.get("uarch"))}
