@@ -1138,6 +1138,278 @@ def bench_service_throughput():
     })
 
 
+SERVICE_SATURATION_STATS: dict = {}
+
+
+def bench_service_saturation(smoke: bool = False):
+    """Concurrent-client saturation of the serving tier (the PR-8 rebuild).
+
+    Four measurements, all on the same warm bulk-wave workload:
+
+    * **sustained throughput under concurrency** — closed-loop load via
+      the replayable generator (``service/loadgen.py``) at 1 and 8
+      connections, against the PR-7 one-thread-per-connection JSON server
+      (the baseline) and the asyncio front door on both wires. Target:
+      the front door on the binary wire sustains >=5x the baseline's warm
+      predictions/sec at 8 clients.
+    * **open-loop saturation curve** — fixed arrival rates from 0.5x to
+      4x measured capacity; latency is charged from the scheduled arrival
+      (no coordinated omission), so p99 under overload is honest. The
+      admission controller must shed (typed ``Overloaded``) instead of
+      queueing unboundedly.
+    * **wire-format ratio** — binary vs JSON end-to-end on bulk waves,
+      plus a pure codec micro-bench (encode+decode round trip). Target:
+      binary >=2x the JSON framing.
+    * **device-resident port bounds** — ``BatchPredictor._port_bounds``
+      numpy vs the jax kernel at widening waves, asserted bit-identical.
+
+    Correctness is gated inline: served envelopes on both wires must be
+    byte-identical (canonical JSON, trace ids stripped) to the in-memory
+    ``BatchPredictor`` reference, and smoke-level closed-loop load must
+    not shed — violations raise, which is what the CI smoke step wants."""
+    import json as _json
+    import tempfile
+    import time as _time
+    from pathlib import Path as _Path
+
+    from repro.core import model_io
+    from repro.core.engine import Campaign
+    from repro.core.isa import TEST_ISA
+    from repro.core.predictor import sum_usage
+    from repro.core.simulator import SimMachine
+    from repro.core.uarch import SIM_SKL
+    from repro.service import protocol
+    from repro.service.batch_predictor import BatchPredictor
+    from repro.service.client import ServiceClient
+    from repro.service.loadgen import run_load
+    from repro.service.registry import ModelRegistry
+    from repro.service.server import (PredictionServer, PredictionService,
+                                      ThreadedPredictionServer)
+    from repro.service.workload import random_blocks
+
+    machine = SimMachine(SIM_SKL, TEST_ISA)
+    names = ["ADD_R64_R64", "IMUL_R64_R64", "MUL_R64", "ADC_R64_R64", "CMC",
+             "TEST_R64_R64", "SHLD_R64_R64_I8", "MOVQ2DQ_X_X", "AESDEC_X_X",
+             "PSHUFD_X_X", "PADDD_X_X", "MOV_R64_M64"]
+    model = Campaign(instr_names=names).run([machine],
+                                            TEST_ISA).models[machine.name]
+    tmpdir = tempfile.TemporaryDirectory(prefix="uops_service_sat_")
+    tmp = _Path(tmpdir.name)
+    (tmp / f"{machine.name}.xml").write_text(model_io.to_xml(model, TEST_ISA))
+    ua = machine.name
+
+    wave = 24 if smoke else 64
+    dur = 0.5 if smoke else 2.0
+    conns = 8
+    blocks = random_blocks(model, TEST_ISA, wave, seed=17, max_len=8)
+    rows: list[dict] = []
+
+    def drive(server, kind, wire, n_conns, rate=None):
+        r = run_load(server.host, server.port, ua, blocks, wire=wire,
+                     conns=n_conns, duration_s=dur, rate_rps=rate)
+        r["server"] = kind
+        rows.append(r)
+        offered = f"{rate:.0f}rps" if rate else "closed"
+        print(f"  {kind:>9s} {wire:>6s} conns={n_conns} load={offered:>8s} "
+              f"rps={r['rps']:>7.1f} pred/s={r['predictions_per_s']:>9.1f} "
+              f"p50={r['p50_ms']:.2f}ms p99={r['p99_ms']:.2f}ms "
+              f"shed={r['shed']} err={r['errors']}")
+        return r
+
+    print("\n== service saturation (concurrent clients, warm bulk waves) ==")
+    print(f"  wave={wave} blocks/request, {dur}s per point")
+
+    # ---- baseline: the PR-7 threaded JSON server ----
+    with ThreadedPredictionServer(
+            PredictionService(ModelRegistry(tmp))) as srv:
+        with ServiceClient(srv.host, srv.port, wire="json") as c:
+            c.predict_batch(ua, blocks)  # warm the cache
+        legacy1 = drive(srv, "threaded", "json", 1)
+        legacy8 = drive(srv, "threaded", "json", conns)
+
+    # ---- the asyncio front door, both wires ----
+    svc = PredictionService(ModelRegistry(tmp))
+    with PredictionServer(svc, workers=4, max_queue=64) as srv:
+        # byte-identity under the served path: both wires vs the in-memory
+        # reference predictor
+        bp_ref = BatchPredictor(model, TEST_ISA, backend="numpy")
+        expected = [{"ok": True, "uarch": ua,
+                     "result": protocol.prediction_to_dict(p)}
+                    for p in bp_ref.predict_batch(blocks)]
+        canon_ref = _json.dumps(expected, sort_keys=True)
+        with ServiceClient(srv.host, srv.port, wire="json") as cj, \
+                ServiceClient(srv.host, srv.port, wire="binary") as cb:
+            for _ in range(2):  # cold then warm (cached-segment path)
+                ej = cj.predict_batch(ua, blocks)
+                eb = cb.predict_batch(ua, blocks)
+                for e in ej + eb:
+                    e.pop("trace_id", None)
+                if not (_json.dumps(ej, sort_keys=True) == canon_ref
+                        == _json.dumps(eb, sort_keys=True)):
+                    raise AssertionError(
+                        "served envelopes diverge from the in-memory "
+                        "BatchPredictor reference")
+        print("  byte-identity: json == binary == in-memory reference OK")
+
+        front_j1 = drive(srv, "frontdoor", "json", 1)
+        front_j8 = drive(srv, "frontdoor", "json", conns)
+        front_b1 = drive(srv, "frontdoor", "binary", 1)
+        front_b8 = drive(srv, "frontdoor", "binary", conns)
+        closed_rows = [legacy1, legacy8, front_j1, front_j8, front_b1,
+                       front_b8]
+
+        # ---- open-loop saturation sweep (binary wire) ----
+        cap = max(front_b8["rps"], 1.0)
+        sat_rows = []
+        for f in ((0.5, 2.0) if smoke else (0.5, 0.8, 1.2, 2.0, 4.0)):
+            r = drive(srv, "frontdoor", "binary", conns, rate=cap * f)
+            r["offered_factor"] = f
+            sat_rows.append(r)
+        admission = srv.admission.stats()
+        wire_counts = dict(srv.wire_counts)
+        wave_cache = svc.wave_cache.stats()
+
+    # ---- load shedding: a deliberately undersized server must shed with
+    # typed Overloaded errors (bounded queue) instead of queueing forever
+    svc2 = PredictionService(ModelRegistry(tmp))
+    with PredictionServer(svc2, workers=1, max_queue=2) as srv:
+        with ServiceClient(srv.host, srv.port, wire="json") as c:
+            c.predict_batch(ua, blocks)
+        shed_row = drive(srv, "tiny(w1q2)", "json", conns)
+        shed_admission = srv.admission.stats()
+    if shed_row["shed"] == 0:
+        raise AssertionError("undersized server (1 worker, queue 2) did "
+                             "not shed under 8-way load")
+    if shed_admission["peak_inflight"] > 1 + 2:
+        raise AssertionError(f"queue grew past its bound: {shed_admission}")
+
+    # queue growth is bounded by construction; assert the accounting agrees
+    if admission["peak_inflight"] > admission["workers"] + \
+            admission["max_queue"] + 1:
+        raise AssertionError(f"unbounded queue growth: {admission}")
+    overloaded = [r for r in sat_rows if r.get("offered_factor", 0) >= 2.0]
+    if overloaded and not smoke:
+        if all(r["shed"] == 0 and r["p99_ms"] > 10 * dur * 1e3
+               for r in overloaded):
+            raise AssertionError("overload neither shed nor kept latency "
+                                 "bounded")
+    shed_at_smoke_load = sum(r["shed"] + r["errors"] for r in closed_rows)
+    if shed_at_smoke_load:
+        raise AssertionError(f"closed-loop (smoke-level) load shed/errored "
+                             f"{shed_at_smoke_load} requests")
+
+    # ---- framing micro-bench: server-side decode + encode per bulk wave
+    # (the work the wire format imposes per warm request; the binary
+    # cached-segment response path is what the server actually runs)
+    packed = [protocol.instrs_to_packed(b) for b in blocks]
+    req_json = _json.dumps({"op": "predict_batch", "uarch": ua,
+                            "blocks": [protocol.packed_to_wire(pb)
+                                       for pb in packed]},
+                           separators=(",", ":"))
+    req_bin = protocol.encode_predict_batch(ua, packed)
+    resp_envs = expected  # trace-id-free envelopes, as the server sends
+    resp_json = _json.dumps({"ok": True, "result": resp_envs},
+                            separators=(",", ":"))
+    pidx = {p: i for i, p in enumerate(bp_ref.port_names)}
+    chunks = [protocol.encode_pred_chunk(e, pidx) for e in resp_envs]
+    reps = 30 if smoke else 200
+
+    def _codec_pass(fn):
+        t0 = _time.perf_counter()
+        for _ in range(reps):
+            fn()
+        return (_time.perf_counter() - t0) * 1e6 / reps
+
+    def json_framing():
+        msg = _json.loads(req_json)
+        tuple(protocol.wire_to_packed(b) for b in msg["blocks"])
+        _json.dumps({"ok": True, "result": resp_envs},
+                    separators=(",", ":"))
+
+    def bin_framing():
+        protocol.decode_predict_batch(req_bin)
+        protocol.encode_predict_batch_resp("t" * 16, ua,
+                                           bp_ref.port_names, chunks)
+
+    json_us = min(_codec_pass(json_framing) for _ in range(3))
+    bin_us = min(_codec_pass(bin_framing) for _ in range(3))
+    codec_ratio = json_us / bin_us
+    print(f"  server-side framing (wave={wave}): json={json_us:.0f}us "
+          f"binary={bin_us:.0f}us ratio={codec_ratio:.1f}x")
+    print(f"  request bytes: json={len(req_json)} "
+          f"binary={len(protocol.encode_predict_batch(ua, packed))}; "
+          f"response bytes: json={len(resp_json)} binary="
+          f"{len(protocol.encode_predict_batch_resp('t' * 16, ua, bp_ref.port_names, chunks))}")
+
+    # ---- device-resident port bounds: numpy vs jax, bit-identical ----
+    dev_rows = []
+    try:
+        bp_jax = BatchPredictor(model, TEST_ISA, backend="jax",
+                                min_device_blocks=1)
+    except Exception:
+        bp_jax = None
+    for w in ((64,) if smoke else (64, 256, 1024)):
+        wb = random_blocks(model, TEST_ISA, w, seed=23, max_len=8)
+        codes = [list(b) for b in wb]
+        sums = {i: sum_usage(model, c) for i, c in enumerate(codes)}
+        bn, np_us = _timed(lambda: bp_ref._port_bounds(sums))
+        np_us = min(np_us, _timed(lambda: bp_ref._port_bounds(sums))[1])
+        row = {"wave": w, "numpy_us": round(np_us, 1)}
+        if bp_jax is not None:
+            bp_jax._port_bounds(sums)  # compile once
+            bj, jax_us = _timed(lambda: bp_jax._port_bounds(sums))
+            jax_us = min(jax_us,
+                         _timed(lambda: bp_jax._port_bounds(sums))[1])
+            if bn != bj:
+                raise AssertionError(f"device port bounds diverge from "
+                                     f"numpy at wave {w}")
+            row.update(jax_us=round(jax_us, 1),
+                       jax_vs_numpy=round(np_us / jax_us, 2))
+        dev_rows.append(row)
+        print(f"  port-bounds wave={w}: numpy={row['numpy_us']}us"
+              + (f" jax={row['jax_us']}us ({row['jax_vs_numpy']}x)"
+                 if "jax_us" in row else " (jax unavailable)"))
+
+    tmpdir.cleanup()
+
+    # ---- headline gates ----
+    speedup = front_b8["predictions_per_s"] / max(
+        legacy8["predictions_per_s"], 1e-9)
+    wire_ratio = front_b8["predictions_per_s"] / max(
+        front_j8["predictions_per_s"], 1e-9)
+    meets_5x = speedup >= 5.0
+    meets_2x = wire_ratio >= 2.0
+    print(f"  front door (binary, {conns} conns) vs PR-7 threaded server: "
+          f"{speedup:.1f}x warm predictions/sec "
+          f"({'meets' if meets_5x else 'MISSES'} the >=5x target)")
+    print(f"  binary vs JSON framing: e2e {wire_ratio:.1f}x, codec "
+          f"{codec_ratio:.1f}x ({'meets' if meets_2x else 'MISSES'} "
+          f"the >=2x target)")
+    emit("service_saturation_frontdoor_b8",
+         1e6 / max(front_b8["predictions_per_s"], 1e-9),
+         f"pred/s={front_b8['predictions_per_s']:.0f};"
+         f"speedup={speedup:.1f}x;p99_ms={front_b8['p99_ms']}")
+    emit("service_saturation_codec", bin_us,
+         f"json_us={json_us:.0f};ratio={codec_ratio:.1f}x")
+
+    SERVICE_SATURATION_STATS.update({
+        "smoke": smoke, "wave": wave, "duration_s": dur,
+        "closed_loop": closed_rows, "open_loop": sat_rows,
+        "shed_demo": {"row": shed_row, "admission": shed_admission},
+        "admission_after": admission, "wire_conns": wire_counts,
+        "wave_cache": wave_cache,
+        "codec": {"wave": wave, "json_us": round(json_us, 1),
+                  "binary_us": round(bin_us, 1),
+                  "ratio": round(codec_ratio, 2)},
+        "device_port_bounds": dev_rows,
+        "speedup_vs_threaded_at_8": round(speedup, 2),
+        "binary_vs_json_e2e": round(wire_ratio, 2),
+        "meets_5x_target": meets_5x,
+        "meets_2x_wire_target": meets_2x,
+        "served_bit_identical": True,
+    })
+
+
 def table_roofline():
     from repro.analysis.roofline import full_table, markdown_table
 
@@ -1170,6 +1442,7 @@ BENCHES = {
     "bench_wave_fusion": bench_wave_fusion,
     "bench_campaign_cache": bench_campaign_cache,
     "bench_service_throughput": bench_service_throughput,
+    "bench_service_saturation": bench_service_saturation,
     "bench_hardware_corpus": bench_hardware_corpus,
     "bench_kernel_contention": bench_kernel_contention,
     "table_roofline": table_roofline,
@@ -1197,7 +1470,7 @@ def main(argv=None) -> None:
         fn = BENCHES[name]
         if name in ("bench_batch_sim", "bench_backend_matrix",
                     "bench_trace_overhead", "bench_device_scaling",
-                    "bench_characterize"):
+                    "bench_characterize", "bench_service_saturation"):
             fn(smoke=args.smoke)
         else:
             fn()
@@ -1210,6 +1483,7 @@ def main(argv=None) -> None:
                  for n, us, d in ROWS],
         "campaign_cache": CAMPAIGN_STATS,
         "service": SERVICE_STATS,
+        "service_saturation": SERVICE_SATURATION_STATS,
         "batch_sim": BATCH_SIM_STATS,
         "backend_matrix": BACKEND_MATRIX_STATS,
         "trace_overhead": TRACE_OVERHEAD_STATS,

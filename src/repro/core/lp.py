@@ -43,6 +43,29 @@ def union_closure(combos, cap: int = 4096) -> list | None:
     return sorted(closed, key=lambda s: (len(s), sorted(s)))
 
 
+def cut_matrices(combos, candidates):
+    """Integer matrices of the closed form, shared by the vectorized
+    predictor backends (see ``service/batch_predictor.py``).
+
+    Returns ``(mask, sizes)`` as numpy int32 arrays: ``mask[c, s] = 1``
+    iff port combination ``combos[c]`` is contained in candidate cut set
+    ``candidates[s]`` and ``sizes[s] = |candidates[s]|``.  With integer
+    μop counts ``u`` (blocks × combos), ``demand = u @ mask`` is an exact
+    integer matrix product, so the bound ``max_s demand[:, s]/sizes[s]``
+    can be evaluated *exactly* on any backend: the winning candidate per
+    block can be selected purely with integer cross-multiplication
+    (``d1 * s2 > d2 * s1``) and only the final division performed in
+    float64 — two candidates with equal rational ratios round to the same
+    float, so the result is bit-identical to the scalar reference loop in
+    :func:`cut_bound`."""
+    import numpy as np
+
+    mask = np.array([[1 if pc <= s else 0 for s in candidates]
+                     for pc in combos], dtype=np.int32)
+    sizes = np.array([len(s) for s in candidates], dtype=np.int32)
+    return mask, sizes
+
+
 def cut_bound(usage: dict, candidates=None) -> float:
     """Exact min-max port load via the min-cut closed form.
 

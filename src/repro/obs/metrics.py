@@ -111,6 +111,28 @@ class Histogram:
                 self._vals[self._i] = v
                 self._i = (self._i + 1) % self.keep
 
+    def observe_many(self, v: float, n: int):
+        """n observations of the same value under one lock acquisition —
+        the batched-endpoint hot path (a 512-block wave is one call, not
+        512 lock round-trips)."""
+        if n <= 0:
+            return
+        with self._lock:
+            self._count += n
+            self._sum += v * n
+            if self._min is None or v < self._min:
+                self._min = v
+            if self._max is None or v > self._max:
+                self._max = v
+            room = self.keep - len(self._vals)
+            fill = min(n, room)
+            if fill > 0:
+                self._vals.extend([v] * fill)
+                n -= fill
+            for _ in range(min(n, self.keep)):  # ring overwrite
+                self._vals[self._i] = v
+                self._i = (self._i + 1) % self.keep
+
     @property
     def count(self):
         return self._count
@@ -272,12 +294,18 @@ def absorb_server_stats(reg: MetricsRegistry, stats: Dict[str, Any],
         for legacy, name in ENDPOINT_ALIASES.items():
             if legacy in summ:
                 reg.gauge(base + name).set(summ[legacy])
-    for section in ("cache", "coalescer", "registry"):
+    for section in ("cache", "coalescer", "registry", "admission", "wire",
+                    "wave_cache", "predictor"):
         sub = stats.get(section)
         if isinstance(sub, dict):
             for k, v in sub.items():
                 if isinstance(v, (int, float, bool)):
                     reg.gauge(f"{prefix}{section}.{k}").set(v)
+    # per-shard cache hit rates (sharded result cache front door)
+    for i, sh in enumerate((stats.get("cache") or {}).get("shards") or ()):
+        for k, v in sh.items():
+            if isinstance(v, (int, float, bool)):
+                reg.gauge(f"{prefix}cache.shard.{i}.{k}").set(v)
     return reg
 
 

@@ -1,15 +1,22 @@
 # uops-as-a-service: turn exported machine-readable models (§6.4) into a
 # queryable prediction backend — a model registry over XML artifacts, a
-# vectorized batch predictor, a threaded request server with coalescing and
-# an LRU result cache, and a client + CLI.
+# vectorized batch predictor (numpy or device-resident jax closed form),
+# an asyncio multi-worker front door with admission control, a sharded
+# result cache, a negotiated binary/JSON wire, and a client + CLI.
 from repro.service.batch_predictor import BatchPredictor
-from repro.service.client import ServiceClient, local_service
+from repro.service.client import (ServiceClient, ServiceError,
+                                  ServiceOverloaded, ServiceUnavailable,
+                                  local_service)
 from repro.service.registry import (ModelNotFoundError, ModelRegistry,
                                     StaleModelError)
-from repro.service.server import PredictionServer, PredictionService
+from repro.service.server import (AdmissionController, PredictionServer,
+                                  PredictionService,
+                                  ThreadedPredictionServer)
 
 __all__ = [
-    "BatchPredictor", "ModelNotFoundError", "ModelRegistry",
-    "PredictionServer", "PredictionService", "ServiceClient",
-    "StaleModelError", "local_service",
+    "AdmissionController", "BatchPredictor", "ModelNotFoundError",
+    "ModelRegistry", "PredictionServer", "PredictionService",
+    "ServiceClient", "ServiceError", "ServiceOverloaded",
+    "ServiceUnavailable", "StaleModelError", "ThreadedPredictionServer",
+    "local_service",
 ]

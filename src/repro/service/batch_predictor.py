@@ -16,19 +16,39 @@ bit-identical to calling :func:`repro.core.predictor.predict` per block:
   of the combinations it contains only increases its ratio);
 * blocks with more distinct combinations than ``CUT_COMBO_CAP`` fall back
   to the same LP on the same insertion-ordered usage dict as the reference.
+
+Two vectorized backends share the same integer cut matrices
+(:func:`repro.core.lp.cut_matrices`): a numpy matmul (always available) and
+a device-resident jax kernel for wide waves — usage rows ship to the device
+as one int32 array, ``demand = u @ mask`` runs as an integer matrix product
+against the device-resident candidate masks, and the winning candidate per
+block is selected with an exact integer cross-multiplication reduce; only
+the final ``demand/size`` division happens in float64 on the host, so the
+device path is bit-identical to the scalar reference (equal rational ratios
+round to the same double). Wave shapes are bucketed with the same
+quarter-octave rule as ``core/batch_sim.py`` and each bucket's kernel is
+AOT-compiled once.
 """
 from __future__ import annotations
+
+import os
+import threading
 
 import numpy as np
 
 from repro.obs import tracer as obs
 from repro.core.characterize import PerfModel
 from repro.core.isa import ISA
-from repro.core.lp import CUT_COMBO_CAP, port_bound_from_usage, union_closure
+from repro.core.lp import (CUT_COMBO_CAP, cut_matrices, port_bound_from_usage,
+                           union_closure)
 from repro.core.predictor import (Prediction, UnknownInstructionError,
                                   _latency_bound, check_block,
                                   classify_bottleneck, port_pressure,
                                   sum_usage)
+
+# below this many closed-form rows the host↔device round trip costs more
+# than the numpy matmul saves; tuned on the bulk-wave benchmark
+MIN_DEVICE_BLOCKS = 32
 
 
 class BatchPredictor:
@@ -41,7 +61,8 @@ class BatchPredictor:
     the analytic bounds can be judged against at workload scale."""
 
     def __init__(self, model: PerfModel, isa: ISA, issue_width: int = 4,
-                 machine=None):
+                 machine=None, *, backend: str | None = None,
+                 min_device_blocks: int | None = None):
         self.model = model
         self.isa = isa
         self.issue_width = issue_width
@@ -61,12 +82,38 @@ class BatchPredictor:
         # None => too many to enumerate; per-block closed form / LP instead.
         cand = union_closure(combos) if combos else []
         if cand:
-            self._cut_mask = np.array(
-                [[float(pc <= s) for pc in combos] for s in cand]).T  # C×S
-            self._cut_size = np.array([float(len(s)) for s in cand])
+            mask_i, size_i = cut_matrices(combos, cand)
+            self._mask_i = mask_i                       # C×S int32
+            self._size_i = size_i                       # S   int32
+            self._cut_mask = mask_i.astype(float)       # C×S
+            self._cut_size = size_i.astype(float)
         else:
+            self._mask_i = self._size_i = None
             self._cut_mask = None
             self._cut_size = None
+        # canonical port table (binary wire + device kernels index into it)
+        self.port_names = sorted({p for pc in combos for p in pc})
+        self.port_index = {p: i for i, p in enumerate(self.port_names)}
+        # vectorized closed-form backend: "numpy" | "jax" | "auto"/None
+        if backend is None:
+            backend = os.environ.get("REPRO_PREDICT_BACKEND", "auto")
+        if backend == "auto":
+            try:
+                import jax  # noqa: F401, PLC0415
+                backend = "jax"
+            except Exception:
+                backend = "numpy"
+        if backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown predict backend {backend!r}")
+        self.backend = backend
+        self.min_device_blocks = (MIN_DEVICE_BLOCKS if min_device_blocks
+                                  is None else min_device_blocks)
+        self._dev_lock = threading.Lock()
+        self._dev_kernels: dict[int, object] = {}   # bucket size -> compiled
+        self._dev_mask = None                       # device-resident C×S
+        self._stats = {"numpy_waves": 0, "device_waves": 0,
+                       "device_blocks": 0, "device_compiles": 0,
+                       "device_fallbacks": 0}
 
     # ------------------------------------------------------------------
     def predict(self, code) -> Prediction:
@@ -171,13 +218,111 @@ class BatchPredictor:
             else:
                 fast_rows.append(i)
         if fast_rows:
-            u = np.zeros((len(fast_rows), len(self._combos)))
-            for r, i in enumerate(fast_rows):
-                for pc, n in sums[i][0].items():
-                    u[r, self._combo_idx[pc]] = n
-            demand = u @ self._cut_mask              # rows × candidates
-            ratios = demand / self._cut_size
-            best = ratios.max(axis=1)
+            best = None
+            if (self.backend == "jax"
+                    and len(fast_rows) >= self.min_device_blocks):
+                best = self._device_bounds(sums, fast_rows)
+            if best is None:
+                self._stats["numpy_waves"] += 1
+                u = np.zeros((len(fast_rows), len(self._combos)))
+                for r, i in enumerate(fast_rows):
+                    for pc, n in sums[i][0].items():
+                        u[r, self._combo_idx[pc]] = n
+                demand = u @ self._cut_mask          # rows × candidates
+                ratios = demand / self._cut_size
+                best = ratios.max(axis=1)
             for r, i in enumerate(fast_rows):
                 bounds[i] = float(best[r])
         return bounds
+
+    # ------------------------------------------------------------------
+    # device-resident closed form (jax backend)
+    # ------------------------------------------------------------------
+    def _device_bounds(self, sums: dict, fast_rows: list):
+        """All fast-row port bounds in one device call, or None to fall
+        back to numpy (non-integer counts, overflow risk, jax trouble).
+
+        The kernel is exact: int32 ``demand = u @ mask`` then an integer
+        cross-multiplication argmax over candidates; the single float64
+        division happens host-side, so results are bit-identical to the
+        scalar reference."""
+        n = len(fast_rows)
+        u = np.zeros((n, len(self._combos)), dtype=np.int32)
+        for r, i in enumerate(fast_rows):
+            for pc, cnt in sums[i][0].items():
+                v = int(cnt)
+                if v != cnt:                    # non-integer μop count
+                    self._stats["device_fallbacks"] += 1
+                    return None
+                u[r, self._combo_idx[pc]] = v
+        # cross products stay well inside int32: demand ≤ row total
+        if int(u.sum(axis=1).max()) * int(self._size_i.max()) >= 2 ** 31:
+            self._stats["device_fallbacks"] += 1
+            return None
+        try:
+            num, den = self._device_call(u)
+        except Exception:
+            self._stats["device_fallbacks"] += 1
+            return None
+        self._stats["device_waves"] += 1
+        self._stats["device_blocks"] += n
+        return num[:n].astype(np.float64) / den[:n].astype(np.float64)
+
+    def _device_call(self, u: np.ndarray):
+        from repro.core.batch_sim import _bucket  # noqa: PLC0415
+
+        bucket = _bucket(u.shape[0], 8)
+        fn = self._dev_kernels.get(bucket)
+        if fn is None:
+            fn = self._compile_kernel(bucket)
+        if u.shape[0] != bucket:
+            u = np.concatenate(
+                [u, np.zeros((bucket - u.shape[0], u.shape[1]), u.dtype)])
+        num, den = fn(u)
+        return np.asarray(num), np.asarray(den)
+
+    def _compile_kernel(self, bucket: int):
+        """AOT-compile the port-bound kernel for one shape bucket (same
+        quarter-octave buckets as ``core/batch_sim``); the candidate mask
+        and sizes live on the device across calls."""
+        import jax  # noqa: PLC0415
+        import jax.numpy as jnp  # noqa: PLC0415
+
+        with self._dev_lock:
+            fn = self._dev_kernels.get(bucket)
+            if fn is not None:
+                return fn
+            if self._dev_mask is None:
+                self._dev_mask = jax.device_put(
+                    jnp.asarray(self._mask_i, dtype=jnp.int32))
+                self._dev_size = jax.device_put(
+                    jnp.asarray(self._size_i, dtype=jnp.int32))
+            mask_d, size_d = self._dev_mask, self._dev_size
+
+            def port_bound_kernel(u):
+                demand = u @ mask_d                     # B×S int32, exact
+                den = jnp.broadcast_to(size_d, demand.shape)
+
+                def pick(acc, x):
+                    an, ad = acc
+                    bn, bd = x
+                    take = an * bd < bn * ad            # exact ratio compare
+                    return (jnp.where(take, bn, an), jnp.where(take, bd, ad))
+
+                num, den_w = jax.lax.reduce(
+                    (demand, den),
+                    (jnp.int32(0), jnp.int32(1)), pick, (1,))
+                return num, den_w
+
+            shape = jax.ShapeDtypeStruct((bucket, len(self._combos)),
+                                         jnp.int32)
+            with obs.span("predict.compile", bucket=bucket):
+                fn = jax.jit(port_bound_kernel).lower(shape).compile()
+            self._stats["device_compiles"] += 1
+            self._dev_kernels[bucket] = fn
+            return fn
+
+    def backend_stats(self) -> dict:
+        """Counters for the vectorized closed-form backend (wave counts,
+        device compiles/fallbacks) — absorbed into service metrics."""
+        return {"backend": self.backend, **self._stats}

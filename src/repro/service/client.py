@@ -1,12 +1,29 @@
-"""Client for uops-as-a-service: a persistent socket speaking the
-newline-delimited JSON protocol, plus a ``local_service`` helper that spins
-up registry + service + server in-process (ephemeral port) for CLIs, tests,
-and benchmarks.
+"""Client for uops-as-a-service: a persistent socket speaking either the
+length-prefixed binary wire or the legacy newline-JSON protocol, plus a
+``local_service`` helper that spins up registry + service + server
+in-process (ephemeral port) for CLIs, tests, and benchmarks.
+
+Wire negotiation (``wire="auto"``, the default): the client opens with a
+binary HELLO frame; a new server answers HELLO_ACK and the connection runs
+binary, a legacy server fails to parse the frame and closes, upon which
+the client transparently reconnects in JSON mode. ``wire="json"`` skips
+the probe; ``wire="binary"`` makes a JSON-only server a hard
+:class:`ServiceUnavailable` error.
+
+Robustness: ``connect_timeout``/``timeout`` bound every socket operation,
+and calls that hit a connection reset are retried on a fresh connection
+with exponential backoff (``retries``/``backoff_s``); when the budget is
+exhausted — or a read times out — the client raises the typed
+:class:`ServiceUnavailable` instead of a raw socket error. A server-side
+load shed surfaces as :class:`ServiceOverloaded` (carrying
+``queue_depth``/``retry_after_ms`` from the admission controller).
 """
 from __future__ import annotations
 
 import contextlib
+import json
 import socket
+import time
 
 from repro.service import protocol
 
@@ -23,29 +40,152 @@ class ServiceError(RuntimeError):
         return self.error.get("type", "")
 
 
+class ServiceOverloaded(ServiceError):
+    """The admission controller shed this request (typed ``Overloaded``
+    error; ``error["retry_after_ms"]`` suggests a backoff)."""
+
+
+class ServiceUnavailable(ConnectionError):
+    """The server could not be reached (or kept resetting the connection)
+    within the client's retry budget, or a read timed out."""
+
+
 class ServiceClient:
     """One connection to a prediction server. Not thread-safe: use one
-    client per thread (the server side is threaded)."""
+    client per thread (the server multiplexes many connections)."""
 
-    def __init__(self, host: str, port: int, timeout: float = 30.0):
+    def __init__(self, host: str, port: int, timeout: float = 30.0, *,
+                 connect_timeout: float | None = None, wire: str = "auto",
+                 retries: int = 2, backoff_s: float = 0.05):
+        if wire not in ("auto", "binary", "json"):
+            raise ValueError(f"unknown wire {wire!r}")
         self.host, self.port = host, port
-        self._sock = socket.create_connection((host, port), timeout=timeout)
-        self._rfile = self._sock.makefile("rb")
-        self._wfile = self._sock.makefile("wb")
+        self.timeout = timeout
+        self.connect_timeout = (timeout if connect_timeout is None
+                                else connect_timeout)
+        self.retries = max(0, int(retries))
+        self.backoff_s = backoff_s
+        self._wire_pref = wire
+        self.wire: str | None = None  # negotiated: "binary" | "json"
+        self._sock = None
+        self._rfile = self._wfile = None
+        self._connect_with_retry()
+
+    # -- connection management ---------------------------------------------
+    def _open_socket(self):
+        sock = socket.create_connection((self.host, self.port),
+                                        timeout=self.connect_timeout)
+        sock.settimeout(self.timeout)
+        return sock, sock.makefile("rb"), sock.makefile("wb")
+
+    def _connect_once(self) -> None:
+        sock, rfile, wfile = self._open_socket()
+        wire = "json"
+        if self._wire_pref in ("auto", "binary"):
+            try:
+                wfile.write(protocol.hello_frame())
+                wfile.flush()
+                resp = protocol.read_frame(rfile)
+                if resp is None or resp[0] != protocol.K_HELLO_ACK:
+                    raise ConnectionError("no binary HELLO_ACK")
+                wire = "binary"
+            except (ConnectionError, OSError,
+                    protocol.BinaryProtocolError) as e:
+                # legacy JSON server: it closes (or answers garbage) on the
+                # HELLO frame — reconnect plain unless binary was required
+                with contextlib.suppress(OSError):
+                    sock.close()
+                if self._wire_pref == "binary":
+                    raise ServiceUnavailable(
+                        f"server does not speak the binary wire: {e}"
+                    ) from None
+                sock, rfile, wfile = self._open_socket()
+        self._sock, self._rfile, self._wfile = sock, rfile, wfile
+        self.wire = wire
+
+    def _connect_with_retry(self) -> None:
+        last: Exception | None = None
+        for attempt in range(self.retries + 1):
+            try:
+                self._connect_once()
+                return
+            except ServiceUnavailable:
+                raise
+            except (ConnectionError, OSError) as e:
+                last = e
+                if attempt < self.retries:
+                    time.sleep(self.backoff_s * (2 ** attempt))
+        raise ServiceUnavailable(
+            f"cannot connect to {self.host}:{self.port} after "
+            f"{self.retries + 1} attempts: {last}") from last
+
+    def _reconnect(self, mode: str) -> None:
+        self.close()
+        self._connect_with_retry()
+        if self.wire != mode:
+            raise ServiceUnavailable(
+                f"reconnected on the {self.wire} wire but the in-flight "
+                f"request was encoded for {mode}")
 
     # -- plumbing ----------------------------------------------------------
+    def _exchange(self, raw: bytes, mode: str):
+        """Write pre-encoded request bytes, read one response — a
+        ``(kind, payload)`` frame in binary mode, a raw line in JSON mode —
+        retrying on a fresh connection after resets."""
+        attempt = 0
+        while True:
+            try:
+                self._wfile.write(raw)
+                self._wfile.flush()
+                if mode == "binary":
+                    resp = protocol.read_frame(self._rfile)
+                else:
+                    resp = self._rfile.readline() or None
+                if resp is None:
+                    raise ConnectionError("server closed the connection")
+                return resp
+            except TimeoutError as e:  # socket.timeout: no blind retry of
+                # a request the server may still be chewing on
+                self.close()
+                raise ServiceUnavailable(
+                    f"request timed out after {self.timeout}s") from e
+            except (ConnectionError, OSError) as e:
+                self.close()
+                if attempt >= self.retries:
+                    raise ServiceUnavailable(
+                        f"connection to {self.host}:{self.port} kept "
+                        f"resetting ({attempt + 1} attempts): {e}") from e
+                time.sleep(self.backoff_s * (2 ** attempt))
+                attempt += 1
+                self._reconnect(mode)
+
     def _call(self, msg: dict) -> dict:
-        protocol.send_msg(self._wfile, msg)
-        resp = protocol.recv_msg(self._rfile)
-        if resp is None:
-            raise ConnectionError("server closed the connection")
-        return resp
+        if self.wire == "binary":
+            kind, payload = self._exchange(
+                protocol.frame(protocol.K_MSG, protocol.pack_value(msg)),
+                "binary")
+            if kind != protocol.K_RESP:
+                raise protocol.BinaryProtocolError(
+                    f"unexpected response frame kind {kind}")
+            return protocol.unpack_value(payload)
+        line = self._exchange(
+            json.dumps(msg, separators=(",", ":")).encode() + b"\n", "json")
+        return json.loads(line)
 
     @staticmethod
     def _unwrap(resp: dict):
         if not resp.get("ok"):
-            raise ServiceError(resp.get("error"))
+            err = resp.get("error") or {}
+            if err.get("type") == "Overloaded":
+                raise ServiceOverloaded(err)
+            raise ServiceError(err)
         return resp.get("result")
+
+    @staticmethod
+    def _as_packed_block(block):
+        if isinstance(block, str):
+            block = protocol.parse_block(block)
+        return protocol.instrs_to_packed(block)
 
     @staticmethod
     def _as_wire_block(block):
@@ -87,25 +227,85 @@ class ServiceClient:
                            "block": self._as_wire_block(block)})
         return resp if raw else self._unwrap(resp)
 
-    def predict_batch(self, uarch: str, blocks) -> list[dict]:
+    def predict_batch(self, uarch: str, blocks, *,
+                      budget_us: float | None = None) -> list[dict]:
         """Predict many blocks in one request. Returns the per-block
-        response envelopes (callers pick apart ok/error per block)."""
-        wire = [self._as_wire_block(b) for b in blocks]
-        return self._unwrap(self._call({"op": "predict_batch",
-                                        "uarch": uarch, "blocks": wire}))
+        response envelopes (callers pick apart ok/error per block) —
+        identical payloads on either wire. ``budget_us`` asks the server
+        to shed the request instead of queueing it past that latency."""
+        prepared = self.prepare_batch(uarch, blocks, budget_us=budget_us)
+        ok, shed, envs = self.send_prepared(prepared, decode=True)
+        if not ok:
+            self._unwrap(envs[0] if envs else {"ok": False})
+        return envs
 
     def predict_all(self, block) -> dict:
         """The CLI's sweep: one prediction per served uarch."""
         return {ua: self.predict(ua, block, raw=True)
                 for ua in self.uarches()}
 
+    # -- replayable pre-encoded requests (load generation) -----------------
+    def prepare_batch(self, uarch: str, blocks, *,
+                      budget_us: float | None = None) -> tuple:
+        """Pre-encode a ``predict_batch`` request for this connection's
+        wire. The returned opaque tuple can be replayed many times with
+        :meth:`send_prepared` — encoding cost is paid once, which is what
+        an open-loop load generator needs."""
+        packed = [self._as_packed_block(b) for b in blocks]
+        if self.wire == "binary":
+            raw = protocol.frame(
+                protocol.K_PREDICT_BATCH,
+                protocol.encode_predict_batch(uarch, packed,
+                                              int(budget_us or 0)))
+            return ("binary", raw, len(packed))
+        msg = {"op": "predict_batch", "uarch": uarch,
+               "blocks": [protocol.packed_to_wire(pb) for pb in packed]}
+        if budget_us:
+            msg["budget_us"] = budget_us
+        raw = json.dumps(msg, separators=(",", ":")).encode() + b"\n"
+        return ("json", raw, len(packed))
+
+    def send_prepared(self, prepared: tuple, *, decode: bool = True):
+        """Send a prepared request; returns ``(ok, shed, envelopes)``.
+        With ``decode=False`` the response body is only sniffed for
+        ok/shed (the load generator's cheap mode) and ``envelopes`` is
+        None."""
+        mode, raw, _n = prepared
+        if mode != self.wire:
+            raise ServiceUnavailable(
+                f"request prepared for the {mode} wire but connection "
+                f"negotiated {self.wire}")
+        resp = self._exchange(raw, mode)
+        if mode == "binary":
+            kind, payload = resp
+            if kind == protocol.K_PREDICT_BATCH_RESP:
+                if not decode:
+                    return True, False, None
+                return True, False, protocol.decode_predict_batch_resp(
+                    payload)
+            env = protocol.unpack_value(payload)
+            err = (env.get("error") or {}) if isinstance(env, dict) else {}
+            return False, err.get("type") == "Overloaded", [env]
+        if not decode:
+            if resp.startswith(b'{"ok":true'):
+                return True, False, None
+            return False, b'"type":"Overloaded"' in resp[:160], None
+        envd = json.loads(resp)
+        if envd.get("ok"):
+            return True, False, envd["result"]
+        err = envd.get("error") or {}
+        return False, err.get("type") == "Overloaded", [envd]
+
     # -- lifecycle ---------------------------------------------------------
     def close(self) -> None:
         for f in (self._rfile, self._wfile):
+            if f is not None:
+                with contextlib.suppress(OSError):
+                    f.close()
+        if self._sock is not None:
             with contextlib.suppress(OSError):
-                f.close()
-        with contextlib.suppress(OSError):
-            self._sock.close()
+                self._sock.close()
+        self._rfile = self._wfile = self._sock = None
 
     def __enter__(self):
         return self
@@ -115,13 +315,13 @@ class ServiceClient:
 
 
 @contextlib.contextmanager
-def local_service(models_dir, **service_kw):
+def local_service(models_dir, wire: str = "auto", **service_kw):
     """Start server + client against ``models_dir`` on an ephemeral local
     port; yields the connected client, tears everything down after."""
     from repro.service.server import start_server  # noqa: PLC0415
 
     server = start_server(models_dir, **service_kw)
-    client = ServiceClient(server.host, server.port)
+    client = ServiceClient(server.host, server.port, wire=wire)
     try:
         yield client
     finally:

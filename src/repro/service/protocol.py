@@ -22,6 +22,7 @@ structured error carrying the missing variant names.
 from __future__ import annotations
 
 import json
+import struct
 
 from repro.core.predictor import Prediction, UnknownInstructionError
 from repro.core.simulator import Instr
@@ -150,3 +151,455 @@ def recv_msg(rfile):
     if not line:
         return None
     return json.loads(line.decode() if isinstance(line, bytes) else line)
+
+
+# ---------------------------------------------------------------------------
+# binary wire format (negotiated per connection, JSON fallback)
+# ---------------------------------------------------------------------------
+#
+# Frame layout (all multi-byte header fields big-endian)::
+#
+#     magic  u8   0xB5  (never a valid first byte of a JSON request: '{'
+#                        is 0x7B — the server sniffs the first byte of a
+#                        connection to pick the wire)
+#     kind   u8   frame kind (K_* below)
+#     length u32  payload length in bytes
+#     payload     `length` bytes
+#
+# A connection opens with HELLO/HELLO_ACK carrying the binary protocol
+# version. The HELLO payload deliberately ends with a newline so a legacy
+# newline-JSON server reads one (unparseable) "line", fails, and closes —
+# which the client detects and transparently falls back to JSON on a fresh
+# connection. Generic requests/responses (K_MSG/K_RESP) carry the same
+# dicts as the JSON wire in a compact tag encoding; the bulk-wave hot path
+# (K_PREDICT_BATCH/K_PREDICT_BATCH_RESP) uses a specialized layout with
+# per-message string tables and bulk struct packing so a wave of blocks is
+# a handful of `struct` calls, not a per-field tree walk.
+
+BINARY_MAGIC = 0xB5
+BINARY_VERSION = 1
+MAX_FRAME = 64 * 1024 * 1024  # hard cap on payload size (desync guard)
+
+K_HELLO = 1
+K_HELLO_ACK = 2
+K_MSG = 3                 # generic request (tag-encoded dict)
+K_RESP = 4                # generic response (tag-encoded dict)
+K_PREDICT_BATCH = 5       # specialized bulk-wave request
+K_PREDICT_BATCH_RESP = 6  # specialized bulk-wave response
+
+_HDR = struct.Struct(">BBI")
+
+
+class BinaryProtocolError(ValueError):
+    """Malformed or out-of-spec binary frame."""
+
+
+def hello_frame(version: int = BINARY_VERSION) -> bytes:
+    # trailing \n makes legacy JSON servers fail fast (see module note)
+    return frame(K_HELLO, bytes([version]) + b"\n")
+
+
+def frame(kind: int, payload: bytes) -> bytes:
+    return _HDR.pack(BINARY_MAGIC, kind, len(payload)) + payload
+
+
+def write_frame(wfile, kind: int, payload: bytes) -> None:
+    wfile.write(frame(kind, payload))
+    wfile.flush()
+
+
+def read_frame(rfile):
+    """Next ``(kind, payload)``, or None on clean EOF at a frame boundary.
+    Raises :class:`BinaryProtocolError` on desync/oversized frames and
+    ConnectionError on mid-frame EOF."""
+    hdr = rfile.read(_HDR.size)
+    if not hdr:
+        return None
+    while len(hdr) < _HDR.size:
+        more = rfile.read(_HDR.size - len(hdr))
+        if not more:
+            raise ConnectionError("EOF inside binary frame header")
+        hdr += more
+    magic, kind, length = _HDR.unpack(hdr)
+    if magic != BINARY_MAGIC:
+        raise BinaryProtocolError(f"bad frame magic 0x{magic:02x}")
+    if length > MAX_FRAME:
+        raise BinaryProtocolError(f"frame too large ({length} bytes)")
+    chunks = []
+    got = 0
+    while got < length:
+        c = rfile.read(length - got)
+        if not c:
+            raise ConnectionError("EOF inside binary frame payload")
+        chunks.append(c)
+        got += len(c)
+    return kind, b"".join(chunks)
+
+
+# -- generic tag-encoded values (msgpack-style, stdlib only) ----------------
+
+_T_NONE, _T_TRUE, _T_FALSE, _T_INT, _T_FLOAT = 0, 1, 2, 3, 4
+_T_STR, _T_BYTES, _T_LIST, _T_DICT = 5, 6, 7, 8
+
+_F64 = struct.Struct("<d")
+
+
+def _pack_varint(out: bytearray, n: int) -> None:
+    while n > 0x7F:
+        out.append((n & 0x7F) | 0x80)
+        n >>= 7
+    out.append(n)
+
+
+def _unpack_varint(buf, off: int):
+    n = shift = 0
+    while True:
+        b = buf[off]
+        off += 1
+        n |= (b & 0x7F) << shift
+        if not b & 0x80:
+            return n, off
+        shift += 7
+
+
+def _pack_value(out: bytearray, v) -> None:
+    if v is None:
+        out.append(_T_NONE)
+    elif v is True:
+        out.append(_T_TRUE)
+    elif v is False:
+        out.append(_T_FALSE)
+    elif isinstance(v, int):
+        out.append(_T_INT)
+        _pack_varint(out, (v << 1) ^ (v >> 63) if v >= 0 else ((-v) << 1) - 1)
+    elif isinstance(v, float):
+        out.append(_T_FLOAT)
+        out += _F64.pack(v)
+    elif isinstance(v, str):
+        b = v.encode()
+        out.append(_T_STR)
+        _pack_varint(out, len(b))
+        out += b
+    elif isinstance(v, (bytes, bytearray)):
+        out.append(_T_BYTES)
+        _pack_varint(out, len(v))
+        out += v
+    elif isinstance(v, (list, tuple)):
+        out.append(_T_LIST)
+        _pack_varint(out, len(v))
+        for x in v:
+            _pack_value(out, x)
+    elif isinstance(v, dict):
+        out.append(_T_DICT)
+        _pack_varint(out, len(v))
+        for k, x in v.items():
+            _pack_value(out, k)
+            _pack_value(out, x)
+    else:
+        raise TypeError(f"cannot encode {type(v).__name__} on the binary "
+                        f"wire")
+
+
+def _unpack_value(buf, off: int):
+    tag = buf[off]
+    off += 1
+    if tag == _T_NONE:
+        return None, off
+    if tag == _T_TRUE:
+        return True, off
+    if tag == _T_FALSE:
+        return False, off
+    if tag == _T_INT:
+        z, off = _unpack_varint(buf, off)
+        return (z >> 1) if not z & 1 else -((z + 1) >> 1), off
+    if tag == _T_FLOAT:
+        return _F64.unpack_from(buf, off)[0], off + 8
+    if tag == _T_STR:
+        n, off = _unpack_varint(buf, off)
+        return bytes(buf[off:off + n]).decode(), off + n
+    if tag == _T_BYTES:
+        n, off = _unpack_varint(buf, off)
+        return bytes(buf[off:off + n]), off + n
+    if tag == _T_LIST:
+        n, off = _unpack_varint(buf, off)
+        out = []
+        for _ in range(n):
+            v, off = _unpack_value(buf, off)
+            out.append(v)
+        return out, off
+    if tag == _T_DICT:
+        n, off = _unpack_varint(buf, off)
+        d = {}
+        for _ in range(n):
+            k, off = _unpack_value(buf, off)
+            v, off = _unpack_value(buf, off)
+            d[k] = v
+        return d, off
+    raise BinaryProtocolError(f"unknown value tag {tag}")
+
+
+def pack_value(v) -> bytes:
+    out = bytearray()
+    _pack_value(out, v)
+    return bytes(out)
+
+
+def unpack_value(payload):
+    try:
+        v, off = _unpack_value(payload, 0)
+    except (IndexError, struct.error) as exc:
+        raise BinaryProtocolError(f"truncated payload: {exc}") from None
+    if off != len(payload):
+        raise BinaryProtocolError(f"{len(payload) - off} trailing bytes "
+                                  f"after value")
+    return v
+
+
+# -- packed block form (no Instr objects on the warm path) -------------------
+#
+# A packed block is a tuple of (spec, regs_items_tuple, value_hint). The
+# server's warm path builds cache keys straight from this form; Instr
+# objects are only materialized on cache misses.
+
+
+def instrs_to_packed(code):
+    return tuple((i.spec, tuple(i.regs.items()), i.value_hint)
+                 for i in code)
+
+
+def packed_to_instrs(pb):
+    return [Instr(spec, dict(regs), hint) for spec, regs, hint in pb]
+
+
+def packed_key(uarch: str, pb):
+    """Same value as ``block_key(uarch, packed_to_instrs(pb))``."""
+    return (uarch, tuple((spec, tuple(sorted(regs)), hint)
+                         for spec, regs, hint in pb))
+
+
+def packed_to_wire(pb) -> list:
+    return [{"spec": spec, "regs": dict(regs), "value_hint": hint}
+            for spec, regs, hint in pb]
+
+
+def wire_to_packed(items):
+    return tuple((d["spec"], tuple((d.get("regs") or {}).items()),
+                  d.get("value_hint", "low")) for d in items)
+
+
+# -- specialized bulk-wave request ------------------------------------------
+#
+# payload := varint budget_us
+#            strtab: varint n, n × (varint len, utf8 bytes)
+#            varint uarch_idx (into strtab)
+#            varint n_blocks, per block varint n_instrs
+#            varint n_ints, n_ints × u32 LE (one bulk struct call)
+#
+# Per instruction the int stream holds: spec_idx, hint_idx, n_regs, then
+# n_regs × (name_idx, reg_idx). All strings are interned per message.
+
+
+def encode_predict_batch(uarch: str, blocks, budget_us: int = 0) -> bytes:
+    """``blocks``: iterable of packed blocks (see ``instrs_to_packed``)."""
+    strtab: list[str] = []
+    idx: dict[str, int] = {}
+
+    def intern(s: str) -> int:
+        i = idx.get(s)
+        if i is None:
+            i = idx[s] = len(strtab)
+            strtab.append(s)
+        return i
+
+    uarch_idx = intern(uarch)
+    ints: list[int] = []
+    shape: list[int] = []
+    for pb in blocks:
+        shape.append(len(pb))
+        for spec, regs, hint in pb:
+            ints.append(intern(spec))
+            ints.append(intern(hint))
+            ints.append(len(regs))
+            for k, v in regs:
+                ints.append(intern(k))
+                ints.append(intern(v))
+
+    out = bytearray()
+    _pack_varint(out, budget_us)
+    _pack_varint(out, len(strtab))
+    for s in strtab:
+        b = s.encode()
+        _pack_varint(out, len(b))
+        out += b
+    _pack_varint(out, uarch_idx)
+    _pack_varint(out, len(shape))
+    for n in shape:
+        _pack_varint(out, n)
+    _pack_varint(out, len(ints))
+    out += struct.pack(f"<{len(ints)}I", *ints)
+    return bytes(out)
+
+
+def decode_predict_batch(payload):
+    """-> (uarch, budget_us, tuple of packed blocks)."""
+    try:
+        off = 0
+        budget_us, off = _unpack_varint(payload, off)
+        n_str, off = _unpack_varint(payload, off)
+        strtab = []
+        for _ in range(n_str):
+            n, off = _unpack_varint(payload, off)
+            strtab.append(bytes(payload[off:off + n]).decode())
+            off += n
+        uarch_idx, off = _unpack_varint(payload, off)
+        uarch = strtab[uarch_idx]
+        n_blocks, off = _unpack_varint(payload, off)
+        shape = []
+        for _ in range(n_blocks):
+            n, off = _unpack_varint(payload, off)
+            shape.append(n)
+        n_ints, off = _unpack_varint(payload, off)
+        end = off + 4 * n_ints
+        if end > len(payload):
+            raise BinaryProtocolError("truncated int stream")
+        ints = struct.unpack_from(f"<{n_ints}I", payload, off)
+        off = end
+
+        blocks = []
+        p = 0
+        for n_instr in shape:
+            pb = []
+            for _ in range(n_instr):
+                spec = strtab[ints[p]]
+                hint = strtab[ints[p + 1]]
+                n_regs = ints[p + 2]
+                p += 3
+                regs = tuple((strtab[ints[p + 2 * j]],
+                              strtab[ints[p + 2 * j + 1]])
+                             for j in range(n_regs))
+                p += 2 * n_regs
+                pb.append((spec, regs, hint))
+            blocks.append(tuple(pb))
+        if p != n_ints:
+            raise BinaryProtocolError("int stream length mismatch")
+    except BinaryProtocolError:
+        raise
+    except (IndexError, struct.error, UnicodeDecodeError) as exc:
+        raise BinaryProtocolError(f"malformed predict_batch request: "
+                                  f"{exc}") from None
+    return uarch, budget_us, tuple(blocks)
+
+
+# -- specialized bulk-wave response -----------------------------------------
+#
+# payload := str trace_id | str uarch | port table (varint n, n × str)
+#            varint n_blocks | n_blocks × chunk
+# chunk   := 0x00 packed-prediction segment
+#          | 0x01 tag-encoded envelope-remainder dict (errors / fallback)
+#
+# Packed segment: 4 × f64 LE (cycles, port_bound, latency_bound,
+# frontend_bound), bottleneck idx u8, n_pressure u8, n × port idx u8,
+# n × f64 LE. Per-block chunks are cached server-side next to the result
+# envelope, so a warm bulk wave response is a header plus a bytes join.
+
+BOTTLENECKS = ("ports", "latency", "frontend")
+_SEG_HEAD = struct.Struct("<4dBB")
+
+
+def _pack_str(out: bytearray, s: str) -> None:
+    b = s.encode()
+    _pack_varint(out, len(b))
+    out += b
+
+
+def _unpack_str(buf, off: int):
+    n, off = _unpack_varint(buf, off)
+    return bytes(buf[off:off + n]).decode(), off + n
+
+
+def encode_pred_chunk(env: dict, port_idx: dict) -> bytes:
+    """One response chunk for an ok envelope. Falls back to the generic tag
+    encoding when the prediction doesn't fit the packed layout (unknown
+    port / >255 pressure entries)."""
+    result = env["result"]
+    pp = result["port_pressure"]
+    try:
+        bn = BOTTLENECKS.index(result["bottleneck"])
+        if len(pp) > 255:
+            raise ValueError
+        ports = bytes(port_idx[p] for p in pp)
+    except (ValueError, KeyError):
+        return b"\x01" + pack_value(env)
+    out = bytearray(b"\x00")
+    out += _SEG_HEAD.pack(result["cycles"], result["port_bound"],
+                          result["latency_bound"],
+                          result["frontend_bound"], bn, len(pp))
+    out += ports
+    out += struct.pack(f"<{len(pp)}d", *pp.values())
+    return bytes(out)
+
+
+def encode_error_chunk(env: dict) -> bytes:
+    """Chunk for a non-ok envelope (typed error travels generically)."""
+    return b"\x01" + pack_value(env)
+
+
+def encode_predict_batch_resp(trace_id: str, uarch: str, port_names,
+                              chunks) -> bytes:
+    out = bytearray()
+    _pack_str(out, trace_id)
+    _pack_str(out, uarch)
+    _pack_varint(out, len(port_names))
+    for p in port_names:
+        _pack_str(out, p)
+    _pack_varint(out, len(chunks))
+    return bytes(out) + b"".join(chunks)
+
+
+def decode_predict_batch_resp(payload):
+    """-> list of response envelopes, exactly as the JSON wire shapes them
+    (``{"ok": true, "uarch": ..., "result": ..., "trace_id": ...}``)."""
+    try:
+        off = 0
+        trace_id, off = _unpack_str(payload, off)
+        uarch, off = _unpack_str(payload, off)
+        n_ports, off = _unpack_varint(payload, off)
+        ports = []
+        for _ in range(n_ports):
+            p, off = _unpack_str(payload, off)
+            ports.append(p)
+        n_blocks, off = _unpack_varint(payload, off)
+        envs = []
+        for _ in range(n_blocks):
+            kind = payload[off]
+            off += 1
+            if kind == 0:
+                (cycles, port_bound, latency_bound, frontend_bound, bn,
+                 n_pp) = _SEG_HEAD.unpack_from(payload, off)
+                off += _SEG_HEAD.size
+                pidx = payload[off:off + n_pp]
+                off += n_pp
+                vals = struct.unpack_from(f"<{n_pp}d", payload, off)
+                off += 8 * n_pp
+                env = {"ok": True, "uarch": uarch,
+                       "result": {"cycles": cycles, "port_bound": port_bound,
+                                  "latency_bound": latency_bound,
+                                  "frontend_bound": frontend_bound,
+                                  "port_pressure": {ports[i]: v for i, v
+                                                    in zip(pidx, vals)},
+                                  "bottleneck": BOTTLENECKS[bn]},
+                       "trace_id": trace_id}
+            elif kind == 1:
+                env, off = _unpack_value(payload, off)
+                env["trace_id"] = trace_id
+            else:
+                raise BinaryProtocolError(f"unknown chunk kind {kind}")
+            envs.append(env)
+        if off != len(payload):
+            raise BinaryProtocolError("trailing bytes after response")
+    except BinaryProtocolError:
+        raise
+    except (IndexError, struct.error, UnicodeDecodeError) as exc:
+        raise BinaryProtocolError(f"malformed predict_batch response: "
+                                  f"{exc}") from None
+    return envs

@@ -1,20 +1,29 @@
 """The uops-as-a-service backend: coalescing, caching prediction service
-plus a dependency-free threaded TCP front end.
+plus a multi-worker asyncio front door.
 
 :class:`PredictionService` is the in-process core. Requests submitted one at
 a time are *coalesced*: a background worker drains the queue for a short
 window and hands whole per-uarch groups to the vectorized
 :class:`~repro.service.batch_predictor.BatchPredictor`, so a burst of
 single-block queries costs one array pass, not N predictor calls. Results
-land in an LRU cache keyed by ``(model version, uarch, canonical block)``
-— the canonical form is operand-order-free, and including the registry's
-model version means a hot reload implicitly invalidates every stale entry.
+land in a **sharded** LRU cache (:class:`ShardedLRU` — N independent
+locks) keyed by ``(model version, uarch, canonical block)`` — the
+canonical form is operand-order-free, and including the registry's model
+version means a hot reload implicitly invalidates every stale entry. Each
+cache entry also carries the lazily-encoded binary response segment, so a
+warm bulk wave on the binary wire is a bytes join.
 
-:class:`PredictionServer` wraps the service in a ``socketserver``
-ThreadingTCPServer speaking the newline-delimited JSON protocol
-(``protocol.py``). Endpoints: predict, predict_batch, uarches, stats,
-reload, ping. Per-endpoint stats (request counts, error counts, cache hit
-rate, p50/p99 latency, coalesced batch sizes) are served by ``stats``.
+:class:`PredictionServer` is the **asyncio front door**: one event loop
+owns every connection, CPU work runs on a bounded worker pool behind an
+:class:`AdmissionController` (typed ``Overloaded`` shed errors instead of
+unbounded queueing), and the wire — length-prefixed binary or legacy
+newline-JSON — is negotiated per connection by first-byte sniffing
+(``protocol.py``). The PR-7 one-thread-per-connection server survives as
+:class:`ThreadedPredictionServer` (the saturation bench's baseline).
+Endpoints: predict, predict_batch, uarches, stats, metrics, reload,
+validate, ping. Per-endpoint stats (request counts, error counts, cache
+hit rate, p50/p99 latency, coalesced batch sizes, admission/shed
+counters) are served by ``stats``.
 
 Observability (see :mod:`repro.obs`): every prediction request gets a
 **trace id** (returned as ``trace_id`` in the response envelope and
@@ -28,6 +37,7 @@ the ``REPRO_SLOW_REQUEST_US`` budget are logged at WARNING.
 """
 from __future__ import annotations
 
+import asyncio
 import json
 import logging
 import os
@@ -37,7 +47,7 @@ import threading
 import time
 import uuid
 from collections import OrderedDict, deque
-from concurrent.futures import Future
+from concurrent.futures import Future, ThreadPoolExecutor
 
 from repro.core.isa import TEST_ISA
 from repro.core.predictor import UnknownInstructionError, missing_specs
@@ -52,6 +62,11 @@ _LOG = logging.getLogger("repro.service")
 #: env knobs for the access log and the slow-request WARNING budget
 ENV_ACCESS_LOG = "REPRO_ACCESS_LOG"
 ENV_SLOW_US = "REPRO_SLOW_REQUEST_US"
+#: size-based access-log rotation (keep-1 rollover to ``<path>.1``)
+ENV_ACCESS_LOG_MAX = "REPRO_ACCESS_LOG_MAX_BYTES"
+#: front-door sizing knobs
+ENV_WORKERS = "REPRO_SERVER_WORKERS"
+ENV_BUDGET_US = "REPRO_LATENCY_BUDGET_US"
 
 
 def _new_trace_id() -> str:
@@ -114,6 +129,83 @@ class LRUCache:
                     "hit_rate": round(self.hits / max(1, total), 4)}
 
 
+class ShardedLRU:
+    """N independent :class:`LRUCache` shards keyed by hash.
+
+    Under concurrent front-door workers a single cache lock serializes
+    every warm hit; sharding makes lock contention 1/N while keeping the
+    exact LRU semantics per shard. :meth:`stats` keeps the legacy
+    aggregate keys and adds a ``shards`` list with per-shard hit rates."""
+
+    def __init__(self, capacity: int = 4096, shards: int = 8):
+        shards = max(1, int(shards))
+        per = max(1, -(-capacity // shards))  # ceil
+        self.capacity = capacity
+        self.shards = [LRUCache(per) for _ in range(shards)]
+        self._n = shards
+
+    def _shard(self, key) -> LRUCache:
+        return self.shards[hash(key) % self._n]
+
+    @property
+    def hits(self) -> int:
+        return sum(s.hits for s in self.shards)
+
+    @property
+    def misses(self) -> int:
+        return sum(s.misses for s in self.shards)
+
+    def get(self, key):
+        return self._shard(key).get(key)
+
+    def get_many(self, keys) -> list:
+        """Batch lookup: one lock acquisition per *touched shard*."""
+        if self._n == 1:
+            return self.shards[0].get_many(keys)
+        by_shard: dict[int, tuple[list, list]] = {}
+        sids = []
+        for i, k in enumerate(keys):
+            s = hash(k) % self._n
+            sids.append(s)
+            ii, kk = by_shard.setdefault(s, ([], []))
+            ii.append(i)
+            kk.append(k)
+        out = [None] * len(keys)
+        for s, (ii, kk) in by_shard.items():
+            for i, v in zip(ii, self.shards[s].get_many(kk)):
+                out[i] = v
+        return out
+
+    def put(self, key, val) -> None:
+        self._shard(key).put(key, val)
+
+    def __len__(self) -> int:
+        return sum(len(s) for s in self.shards)
+
+    def stats(self) -> dict:
+        per = [s.stats() for s in self.shards]
+        hits = sum(p["hits"] for p in per)
+        misses = sum(p["misses"] for p in per)
+        return {"size": sum(p["size"] for p in per),
+                "capacity": self.capacity, "hits": hits, "misses": misses,
+                "hit_rate": round(hits / max(1, hits + misses), 4),
+                "shards": [{"size": p["size"], "hits": p["hits"],
+                            "misses": p["misses"],
+                            "hit_rate": p["hit_rate"]} for p in per]}
+
+
+class _CacheEntry:
+    """A cached ok-envelope plus its lazily-built binary response chunk:
+    a warm binary bulk wave is served as a join of cached byte segments,
+    no per-block re-encoding."""
+
+    __slots__ = ("env", "seg")
+
+    def __init__(self, env: dict):
+        self.env = env
+        self.seg: bytes | None = None
+
+
 class EndpointStats:
     """Per-endpoint latency/error accounting, backed by the metrics layer.
 
@@ -142,9 +234,9 @@ class EndpointStats:
             self._errors.inc()
 
     def observe_many(self, seconds_each: float, n: int, errors: int) -> None:
-        """n requests that shared one batched pass."""
-        for _ in range(n):
-            self.latency.observe(seconds_each)
+        """n requests that shared one batched pass (single lock round-trip
+        on the histogram — see :meth:`repro.obs.metrics.Histogram.observe_many`)."""
+        self.latency.observe_many(seconds_each, n)
         if errors:
             self._errors.inc(errors)
 
@@ -283,28 +375,45 @@ class PredictionService:
 
     def __init__(self, registry: ModelRegistry, isa=None, *,
                  issue_width: int = 4, cache_size: int = 4096,
-                 max_batch: int = 64, batch_window_s: float = 0.0,
-                 start: bool = True, access_log=None,
-                 slow_request_us: float | None = None):
+                 cache_shards: int = 8, wave_cache_size: int = 256,
+                 max_batch: int = 64,
+                 batch_window_s: float = 0.0, start: bool = True,
+                 access_log=None, access_log_max_bytes: int | None = None,
+                 slow_request_us: float | None = None,
+                 predict_backend: str | None = None,
+                 min_device_blocks: int | None = None):
         self.registry = registry
         self.isa = isa if isa is not None else TEST_ISA
         self.issue_width = issue_width
-        self.cache = LRUCache(cache_size)
+        self.cache = ShardedLRU(cache_size, shards=cache_shards)
+        # exact-request cache for the binary wire: the binary encoding is
+        # canonical (unlike JSON, where key order / whitespace vary), so
+        # identical request payload bytes imply an identical response up
+        # to the trace id. Entries are (uarch, model_version, n, tail) and
+        # are revalidated against the registry version on every hit.
+        self.wave_cache = LRUCache(wave_cache_size)
         self.dedup_hits = 0  # identical requests coalesced within one wave
         self.endpoints: dict[str, EndpointStats] = {}
         self._predictors: dict[str, tuple[int, BatchPredictor]] = {}
         self._plock = threading.Lock()
+        self.predict_backend = predict_backend
+        self.min_device_blocks = min_device_blocks
         self.coalescer = _Coalescer(self, max_batch, batch_window_s)
         self.started = time.time()
+        self._front_door = None  # set by PredictionServer (admission stats)
         # access log (newline-JSON, one record per request) and the
         # slow-request WARNING budget; constructor args override the
         # REPRO_ACCESS_LOG / REPRO_SLOW_REQUEST_US env knobs
         if access_log is None:
             access_log = os.environ.get(ENV_ACCESS_LOG) or None
+        if access_log_max_bytes is None:
+            env = os.environ.get(ENV_ACCESS_LOG_MAX, "").strip()
+            access_log_max_bytes = int(env) if env else None
         if slow_request_us is None:
             env = os.environ.get(ENV_SLOW_US, "").strip()
             slow_request_us = float(env) if env else None
         self.access_log_path = access_log
+        self.access_log_max_bytes = access_log_max_bytes
         self.slow_request_us = slow_request_us
         self._access_fh = None
         self._access_lock = threading.Lock()
@@ -340,6 +449,15 @@ class PredictionService:
                     self._access_fh = open(self.access_log_path, "a",
                                            buffering=1)
                 self._access_fh.write(line + "\n")
+                # size-based keep-1 rollover: long-lived servers must not
+                # grow the log unboundedly (REPRO_ACCESS_LOG_MAX_BYTES)
+                if (self.access_log_max_bytes is not None
+                        and self._access_fh.tell()
+                        >= self.access_log_max_bytes):
+                    self._access_fh.close()
+                    self._access_fh = None
+                    os.replace(self.access_log_path,
+                               str(self.access_log_path) + ".1")
         if self.slow_request_us is not None and wall_us > self.slow_request_us:
             _LOG.warning("slow request trace_id=%s endpoint=%s batch=%d "
                          "wall_us=%.1f (budget %.1f)", trace_id, endpoint,
@@ -358,20 +476,23 @@ class PredictionService:
             cached = self._predictors.get(uarch)
             if cached is not None and cached[0] == handle.version:
                 return cached
-            bp = BatchPredictor(handle.model, self.isa, self.issue_width)
+            bp = BatchPredictor(handle.model, self.isa, self.issue_width,
+                                backend=self.predict_backend,
+                                min_device_blocks=self.min_device_blocks)
             self._predictors[uarch] = (handle.version, bp)
             return self._predictors[uarch]
 
     # -- core serving ------------------------------------------------------
-    def _serve_group(self, uarch: str, codes: list,
-                     trace_ids=None) -> tuple[list, list]:
-        """Answer many blocks for one uarch: cache lookups, one batched
-        predictor pass over the misses, structured errors per block.
-        Returns ``(results, cache_hit_flags)``.  Traced as a
-        ``server.serve_group`` span carrying the request trace ids; the
-        first id is set as ``trace_id`` so nested batch-predictor spans on
-        this thread inherit it."""
-        with obs.span("server.serve_group", uarch=uarch, batch=len(codes),
+    def _serve_entries(self, uarch: str, packed, trace_ids=None):
+        """Answer many *packed* blocks for one uarch: sharded cache
+        lookups, one batched predictor pass over the misses, structured
+        errors per block. Returns ``(entries, cache_hit_flags, bp)`` where
+        each entry is a :class:`_CacheEntry` (ok) or an error-envelope
+        dict, and ``bp`` is the predictor (None if the registry failed).
+        Traced as a ``server.serve_group`` span carrying the request trace
+        ids; the first id is set as ``trace_id`` so nested batch-predictor
+        spans on this thread inherit it."""
+        with obs.span("server.serve_group", uarch=uarch, batch=len(packed),
                       trace_id=(trace_ids[0] if trace_ids else None),
                       trace_ids=list(trace_ids or ())) as sp:
             try:
@@ -382,9 +503,10 @@ class PredictionService:
                 # deletion...) must come back as structured errors, never
                 # escape into the worker
                 err = {"ok": False, "error": protocol.error_to_dict(e)}
-                return [err] * len(codes), [False] * len(codes)
-            keys = [(version, protocol.block_key(uarch, c)) for c in codes]
-            out: list = [None] * len(codes)
+                return [err] * len(packed), [False] * len(packed), None
+            keys = [(version, protocol.packed_key(uarch, pb))
+                    for pb in packed]
+            out: list = [None] * len(packed)
             unique: dict = {}   # key -> first index needing computation
             dups: dict = {}     # index -> representative index
             hits = self.cache.get_many(keys)
@@ -399,23 +521,117 @@ class PredictionService:
             if dups:
                 with self._plock:
                     self.dedup_hits += len(dups)
-            sp.set(cache_hits=len(codes) - len(unique) - len(dups),
+            sp.set(cache_hits=len(packed) - len(unique) - len(dups),
                    misses=len(unique))
             if unique:
                 miss_idx = list(unique.values())
-                results = bp.predict_batch([codes[i] for i in miss_idx],
-                                           on_error="return")
+                results = bp.predict_batch(
+                    [protocol.packed_to_instrs(packed[i])
+                     for i in miss_idx], on_error="return")
                 for i, res in zip(miss_idx, results):
                     if isinstance(res, UnknownInstructionError):
                         out[i] = {"ok": False,
                                   "error": protocol.error_to_dict(res)}
                     else:
-                        out[i] = {"ok": True, "uarch": uarch,
-                                  "result": protocol.prediction_to_dict(res)}
-                        self.cache.put(keys[i], out[i])
+                        entry = _CacheEntry(
+                            {"ok": True, "uarch": uarch,
+                             "result": protocol.prediction_to_dict(res)})
+                        out[i] = entry
+                        self.cache.put(keys[i], entry)
             for i, rep in dups.items():
                 out[i] = out[rep]
-            return out, [h is not None for h in hits]
+            return out, [h is not None for h in hits], bp
+
+    def _serve_group(self, uarch: str, codes: list,
+                     trace_ids=None) -> tuple[list, list]:
+        """Instr-object serving path (coalescer / in-process callers):
+        same core as :meth:`_serve_entries`, envelopes unwrapped."""
+        packed = [protocol.instrs_to_packed(c) for c in codes]
+        entries, hits, _bp = self._serve_entries(uarch, packed, trace_ids)
+        return [e.env if isinstance(e, _CacheEntry) else e
+                for e in entries], hits
+
+    def serve_wave_cached(self, payload: bytes):
+        """Exact-request fast path for the binary wire: if this very
+        request payload was answered before (and the model version is
+        unchanged), return the encoded response payload with a fresh
+        trace id — no decode, no Instr objects, no worker-pool hop. The
+        front door serves these inline on the event loop. Returns None
+        on a miss (caller falls through to the full path)."""
+        ent = self.wave_cache.get(payload)
+        if ent is None:
+            return None
+        uarch, version, n, tail = ent
+        t0 = time.perf_counter()
+        try:
+            if self._predictor(uarch)[0] != version:
+                return None  # hot-reloaded model: recompute
+        except Exception:  # noqa: BLE001 - registry trouble: full path
+            return None
+        tid = _new_trace_id()
+        dt = time.perf_counter() - t0
+        self._stats_for("predict_batch").observe_many(dt / max(1, n), n, 0)
+        self._access("predict_batch", tid, n, n, dt, True)
+        return b"\x10" + tid.encode() + tail
+
+    def serve_wire_batch(self, uarch: str, packed, *, binary: bool = False,
+                         wave_key: bytes | None = None):
+        """The front door's bulk-wave fast path: packed blocks in,
+        wire-ready payload out — no Instr objects, no envelope deep
+        copies on warm hits.
+
+        JSON mode returns ``(envelopes, trace_id)`` where each envelope is
+        a shallow copy of the cached one plus the request ``trace_id``
+        (the envelope is serialized immediately; nested dicts are shared
+        with the cache and must not be mutated). Binary mode returns
+        ``(response_payload_bytes, trace_id)`` — per-block byte segments
+        are cached next to the envelope, so a warm wave is a bytes join."""
+        t0 = time.perf_counter()
+        tid = _new_trace_id()
+        with obs.span("server.predict_batch", uarch=uarch,
+                      batch=len(packed), trace_id=tid):
+            entries, hits, bp = self._serve_entries(uarch, packed, [tid])
+        errors = 0
+        if binary:
+            pidx = bp.port_index if bp is not None else {}
+            chunks = []
+            for e in entries:
+                if isinstance(e, _CacheEntry):
+                    seg = e.seg
+                    if seg is None:
+                        seg = protocol.encode_pred_chunk(e.env, pidx)
+                        e.seg = seg
+                    chunks.append(seg)
+                else:
+                    errors += 1
+                    chunks.append(protocol.encode_error_chunk(e))
+            out = protocol.encode_predict_batch_resp(
+                tid, uarch, bp.port_names if bp is not None else [], chunks)
+            if wave_key is not None and errors == 0 and bp is not None:
+                try:
+                    version = self.registry.get(uarch).version
+                except Exception:  # noqa: BLE001 - raced a reload: skip
+                    version = None
+                if version is not None:
+                    # everything after the trace-id field is id-independent
+                    self.wave_cache.put(
+                        wave_key,
+                        (uarch, version, len(packed), out[1 + len(tid):]))
+        else:
+            envs = []
+            for e in entries:
+                if isinstance(e, _CacheEntry):
+                    envs.append({**e.env, "trace_id": tid})
+                else:
+                    errors += 1
+                    envs.append({**e, "trace_id": tid})
+            out = envs
+        dt = time.perf_counter() - t0
+        self._stats_for("predict_batch").observe_many(
+            dt / max(1, len(packed)), len(entries), errors)
+        self._access("predict_batch", tid, len(packed), sum(hits), dt,
+                     errors == 0)
+        return out, tid
 
     def _stats_for(self, endpoint: str) -> EndpointStats:
         st = self.endpoints.get(endpoint)
@@ -501,8 +717,11 @@ class PredictionService:
     def stats(self) -> dict:
         """The legacy nested stats shape (kept verbatim — clients and
         benches pin it); every numeric field is also exposed canonically
-        through :meth:`metrics`."""
-        return {
+        through :meth:`metrics`. With a front door attached, admission
+        control, wire-negotiation, and predictor-backend sections ride
+        along (absent on a bare in-process service, whose shape is
+        pinned)."""
+        out = {
             "uptime_s": round(time.time() - self.started, 1),
             "endpoints": {k: v.summary()
                           for k, v in list(self.endpoints.items())},
@@ -510,6 +729,22 @@ class PredictionService:
             "coalescer": self.coalescer.stats(),
             "registry": self.registry.stats(),
         }
+        fd = self._front_door
+        if fd is not None:
+            out["admission"] = fd.admission.stats()
+            out["wire"] = dict(fd.wire_counts)
+            out["wave_cache"] = self.wave_cache.stats()
+            with self._plock:
+                bps = [bp for _, bp in self._predictors.values()]
+            if bps:
+                agg: dict = {"backend": bps[0].backend}
+                for bp in bps:
+                    for k, v in bp.backend_stats().items():
+                        if isinstance(v, (int, float)) and not isinstance(
+                                v, bool):
+                            agg[k] = agg.get(k, 0) + v
+                out["predictor"] = agg
+        return out
 
     def metrics(self) -> dict:
         """Canonical :class:`~repro.obs.metrics.MetricsRegistry` snapshot
@@ -583,8 +818,12 @@ class _TCPServer(socketserver.ThreadingTCPServer):
     daemon_threads = True
 
 
-class PredictionServer:
-    """Threaded TCP server around a :class:`PredictionService`."""
+class ThreadedPredictionServer:
+    """The PR-7 one-thread-per-connection TCP server (JSON wire only).
+
+    Kept as the saturation benchmark's baseline and as a minimal
+    dependency-free fallback; the default front door is the asyncio
+    :class:`PredictionServer` below."""
 
     def __init__(self, service: PredictionService, host: str = "127.0.0.1",
                  port: int = 0):
@@ -608,8 +847,377 @@ class PredictionServer:
         self.close()
 
 
+# ---------------------------------------------------------------------------
+# admission control + asyncio front door
+# ---------------------------------------------------------------------------
+
+
+class AdmissionController:
+    """Bounded-queue admission with an EWMA-estimated latency budget.
+
+    ``try_admit`` refuses (returns a shed reason) when the queue behind
+    the worker pool is full, or when the estimated sojourn time
+    ``(queued + 1) × ewma_service_time`` exceeds the request's latency
+    budget — the request would blow its deadline anyway, so shedding it
+    *now* keeps the queue from growing unboundedly and keeps p99 stable.
+    Shed requests get a typed ``Overloaded`` error, never an unbounded
+    queue slot."""
+
+    def __init__(self, workers: int, max_queue: int = 256,
+                 budget_us: float | None = None):
+        self.workers = workers
+        self.max_queue = max_queue
+        self.default_budget_us = budget_us
+        self._lock = threading.Lock()
+        self._inflight = 0
+        self._peak = 0
+        self._admitted = 0
+        self._shed_queue = 0
+        self._shed_budget = 0
+        self._ewma_s = 1e-3  # sojourn-time estimate, seeded at 1 ms
+
+    def try_admit(self, budget_us=None) -> str | None:
+        """None when admitted (caller must :meth:`release`), else the
+        shed reason (``"queue_full"`` / ``"budget"``)."""
+        with self._lock:
+            queued = self._inflight - self.workers
+            if queued >= self.max_queue:
+                self._shed_queue += 1
+                return "queue_full"
+            b = self.default_budget_us
+            if budget_us:
+                b = budget_us
+            if b and queued > 0 and (queued + 1) * self._ewma_s * 1e6 > b:
+                self._shed_budget += 1
+                return "budget"
+            self._inflight += 1
+            self._admitted += 1
+            if self._inflight > self._peak:
+                self._peak = self._inflight
+            return None
+
+    def release(self, elapsed_s: float) -> None:
+        with self._lock:
+            self._inflight -= 1
+            self._ewma_s += 0.2 * (elapsed_s - self._ewma_s)
+
+    def queue_depth(self) -> int:
+        with self._lock:
+            return max(0, self._inflight - self.workers)
+
+    @property
+    def shed(self) -> int:
+        return self._shed_queue + self._shed_budget
+
+    def overloaded_env(self, reason: str) -> dict:
+        """The typed load-shed response envelope."""
+        with self._lock:
+            depth = max(0, self._inflight - self.workers)
+            retry_ms = round(max(1, depth) * self._ewma_s * 1e3, 1)
+        return {"ok": False,
+                "error": {"type": "Overloaded",
+                          "message": f"server overloaded ({reason}): "
+                                     f"retry after ~{retry_ms}ms",
+                          "reason": reason, "queue_depth": depth,
+                          "retry_after_ms": retry_ms}}
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"workers": self.workers, "max_queue": self.max_queue,
+                    "inflight": self._inflight,
+                    "queue_depth": max(0, self._inflight - self.workers),
+                    "peak_inflight": self._peak,
+                    "admitted": self._admitted,
+                    "shed": self._shed_queue + self._shed_budget,
+                    "shed_queue_full": self._shed_queue,
+                    "shed_budget": self._shed_budget,
+                    "ewma_service_us": round(self._ewma_s * 1e6, 1),
+                    "budget_us": self.default_budget_us or 0}
+
+
+def _jline(env: dict) -> bytes:
+    return json.dumps(env, separators=(",", ":")).encode() + b"\n"
+
+
+def _bframe(env: dict) -> bytes:
+    return protocol.frame(protocol.K_RESP, protocol.pack_value(env))
+
+
+class PredictionServer:
+    """Asyncio multi-worker front door around a :class:`PredictionService`.
+
+    One event loop owns every connection; CPU-bound prediction work runs
+    on a bounded worker pool behind the :class:`AdmissionController`
+    (cheap introspection ops — ping/stats/metrics/uarches — answer inline
+    so the server stays observable under saturation). The wire is
+    negotiated per connection by sniffing the first byte: ``0xB5`` opens
+    the length-prefixed binary protocol, anything else is the legacy
+    newline-JSON (see ``protocol.py``), so old clients keep working
+    unchanged. Bulk ``predict_batch`` requests take a zero-copy fast path
+    (``PredictionService.serve_wire_batch``): packed blocks straight from
+    the decoder to the sharded cache, responses joined from cached byte
+    segments on the binary wire."""
+
+    def __init__(self, service: PredictionService, host: str = "127.0.0.1",
+                 port: int = 0, *, workers: int | None = None,
+                 max_queue: int = 256,
+                 latency_budget_us: float | None = None):
+        self.service = service
+        if workers is None:
+            env = os.environ.get(ENV_WORKERS, "").strip()
+            workers = int(env) if env else min(8, (os.cpu_count() or 1) * 4)
+        if latency_budget_us is None:
+            env = os.environ.get(ENV_BUDGET_US, "").strip()
+            latency_budget_us = float(env) if env else None
+        self.admission = AdmissionController(workers, max_queue,
+                                             latency_budget_us)
+        self.wire_counts = {"json_conns": 0, "binary_conns": 0,
+                            "bad_frames": 0}
+        service._front_door = self
+        self._pool = ThreadPoolExecutor(max_workers=workers,
+                                        thread_name_prefix="uops-worker")
+        self._host_arg, self._port_arg = host, port
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._startup = threading.Event()
+        self._startup_err: BaseException | None = None
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="uops-frontdoor")
+        self._thread.start()
+        self._startup.wait(timeout=10)
+        if self._startup_err is not None:
+            raise self._startup_err
+
+    # -- lifecycle ---------------------------------------------------------
+    def _run(self) -> None:
+        loop = asyncio.new_event_loop()
+        asyncio.set_event_loop(loop)
+        self._loop = loop
+        try:
+            srv = loop.run_until_complete(asyncio.start_server(
+                self._handle_conn, self._host_arg, self._port_arg,
+                limit=protocol.MAX_FRAME))
+        except BaseException as e:  # noqa: BLE001 - surfaced to __init__
+            self._startup_err = e
+            self._startup.set()
+            loop.close()
+            return
+        self._asrv = srv
+        self.host, self.port = srv.sockets[0].getsockname()[:2]
+        self._startup.set()
+        try:
+            loop.run_forever()
+        finally:
+            srv.close()
+            loop.run_until_complete(srv.wait_closed())
+            pending = asyncio.all_tasks(loop)
+            for t in pending:
+                t.cancel()
+            if pending:
+                loop.run_until_complete(
+                    asyncio.gather(*pending, return_exceptions=True))
+            loop.close()
+
+    def close(self) -> None:
+        loop = self._loop
+        if loop is not None and loop.is_running():
+            loop.call_soon_threadsafe(loop.stop)
+        self._thread.join(timeout=10)
+        self._pool.shutdown(wait=False)
+        self.service.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def stats(self) -> dict:
+        return {"admission": self.admission.stats(),
+                "wire": dict(self.wire_counts)}
+
+    # -- connection handling ----------------------------------------------
+    async def _handle_conn(self, reader, writer) -> None:
+        try:
+            first = await reader.read(1)
+            if not first:
+                return
+            if first[0] == protocol.BINARY_MAGIC:
+                self.wire_counts["binary_conns"] += 1
+                await self._binary_conn(reader, writer)
+            else:
+                self.wire_counts["json_conns"] += 1
+                await self._json_conn(first, reader, writer)
+        except (asyncio.IncompleteReadError, ConnectionError, OSError):
+            pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    async def _json_conn(self, first: bytes, reader, writer) -> None:
+        carry = first
+        while True:
+            line = await reader.readline()
+            if carry:
+                line, carry = carry + line, b""
+            if not line:
+                return
+            if not line.strip():
+                return  # legacy recv_msg treated a blank line as EOF
+            try:
+                msg = json.loads(line)
+                if not isinstance(msg, dict):
+                    raise ValueError("request must be a JSON object")
+            except ValueError as e:
+                writer.write(_jline({"ok": False,
+                                     "error": protocol.error_to_dict(e)}))
+                await writer.drain()
+                continue  # line framing keeps the stream in sync
+            writer.write(await self._route(msg, _jline))
+            await writer.drain()
+
+    async def _binary_conn(self, reader, writer) -> None:
+        # the sniffer consumed the magic byte of the HELLO frame
+        hdr = await reader.readexactly(5)
+        kind, length = hdr[0], int.from_bytes(hdr[1:], "big")
+        if kind != protocol.K_HELLO or length > 64:
+            self.wire_counts["bad_frames"] += 1
+            return
+        payload = await reader.readexactly(length)
+        version = payload[0] if payload else 0
+        if version != protocol.BINARY_VERSION:
+            writer.write(_bframe({"ok": False, "error": {
+                "type": "BinaryProtocolError",
+                "message": f"unsupported binary version {version}"}}))
+            await writer.drain()
+            return
+        writer.write(protocol.frame(protocol.K_HELLO_ACK,
+                                    bytes([protocol.BINARY_VERSION])))
+        await writer.drain()
+        while True:
+            try:
+                hdr = await reader.readexactly(6)
+            except asyncio.IncompleteReadError:
+                return  # clean EOF at a frame boundary
+            magic, kind = hdr[0], hdr[1]
+            length = int.from_bytes(hdr[2:], "big")
+            if magic != protocol.BINARY_MAGIC or length > protocol.MAX_FRAME:
+                # stream desync: report and close (cannot resynchronize)
+                self.wire_counts["bad_frames"] += 1
+                writer.write(_bframe({"ok": False, "error": {
+                    "type": "BinaryProtocolError",
+                    "message": "frame desync (bad magic or oversized "
+                               "frame); closing connection"}}))
+                await writer.drain()
+                return
+            payload = await reader.readexactly(length)
+            writer.write(await self._dispatch_binary(kind, payload))
+            await writer.drain()
+
+    async def _dispatch_binary(self, kind: int, payload: bytes) -> bytes:
+        if kind == protocol.K_PREDICT_BATCH:
+            fast = self.service.serve_wave_cached(payload)
+            if fast is not None:  # exact-request hit: answer on the loop
+                return protocol.frame(protocol.K_PREDICT_BATCH_RESP, fast)
+            try:
+                uarch, budget_us, blocks = protocol.decode_predict_batch(
+                    payload)
+            except protocol.BinaryProtocolError as e:
+                self.wire_counts["bad_frames"] += 1
+                return _bframe({"ok": False,
+                                "error": protocol.error_to_dict(e)})
+            service = self.service
+
+            def work() -> bytes:
+                try:
+                    resp, _tid = service.serve_wire_batch(
+                        uarch, blocks, binary=True, wave_key=payload)
+                except Exception as e:  # noqa: BLE001 - structured error
+                    return _bframe({"ok": False,
+                                    "error": protocol.error_to_dict(e)})
+                return protocol.frame(protocol.K_PREDICT_BATCH_RESP, resp)
+
+            return await self._admitted(work, budget_us, _bframe)
+        if kind == protocol.K_MSG:
+            try:
+                msg = protocol.unpack_value(payload)
+                if not isinstance(msg, dict):
+                    raise protocol.BinaryProtocolError(
+                        "request must be a dict")
+            except protocol.BinaryProtocolError as e:
+                self.wire_counts["bad_frames"] += 1
+                return _bframe({"ok": False,
+                                "error": protocol.error_to_dict(e)})
+            return await self._route(msg, _bframe)
+        if kind == protocol.K_HELLO:  # redundant HELLO: re-ack
+            return protocol.frame(protocol.K_HELLO_ACK,
+                                  bytes([protocol.BINARY_VERSION]))
+        self.wire_counts["bad_frames"] += 1
+        return _bframe({"ok": False, "error": {
+            "type": "BinaryProtocolError",
+            "message": f"unknown frame kind {kind}"}})
+
+    # -- request routing ---------------------------------------------------
+    async def _route(self, msg: dict, enc) -> bytes:
+        """Dispatch one request dict, returning encoded response bytes.
+        Heavy ops run on the worker pool behind admission control; cheap
+        introspection answers inline on the event loop."""
+        op = msg.get("op")
+        service = self.service
+        if op == "predict_batch":
+            try:
+                uarch = msg["uarch"]
+                blocks = tuple(protocol.wire_to_packed(b)
+                               for b in msg["blocks"])
+            except Exception as e:  # noqa: BLE001 - malformed request
+                return enc({"ok": False,
+                            "error": protocol.error_to_dict(e)})
+
+            def work() -> bytes:
+                try:
+                    envs, _tid = service.serve_wire_batch(uarch, blocks)
+                except Exception as e:  # noqa: BLE001 - structured error
+                    return enc({"ok": False,
+                                "error": protocol.error_to_dict(e)})
+                return enc({"ok": True, "result": envs})
+
+            return await self._admitted(work, msg.get("budget_us"), enc)
+        if op in ("ping", "uarches", "stats", "metrics"):
+            return enc(_Handler._dispatch(service, msg))
+
+        def work() -> bytes:
+            try:
+                return enc(_Handler._dispatch(service, msg))
+            except Exception as e:  # noqa: BLE001 - structured error
+                return enc({"ok": False,
+                            "error": protocol.error_to_dict(e)})
+
+        if op == "predict":
+            return await self._admitted(work, msg.get("budget_us"), enc)
+        # reload / validate / unknown ops: pooled but never shed
+        return await asyncio.get_running_loop().run_in_executor(
+            self._pool, work)
+
+    async def _admitted(self, work, budget_us, enc) -> bytes:
+        reason = self.admission.try_admit(budget_us)
+        if reason is not None:
+            return enc(self.admission.overloaded_env(reason))
+        t0 = time.perf_counter()
+        try:
+            return await asyncio.get_running_loop().run_in_executor(
+                self._pool, work)
+        finally:
+            self.admission.release(time.perf_counter() - t0)
+
+
 def start_server(models_dir, host: str = "127.0.0.1", port: int = 0,
+                 workers: int | None = None, max_queue: int = 256,
+                 latency_budget_us: float | None = None,
                  **service_kw) -> PredictionServer:
-    """Registry → service → TCP server, in one call."""
+    """Registry → service → front door, in one call."""
     service = PredictionService(ModelRegistry(models_dir), **service_kw)
-    return PredictionServer(service, host, port)
+    return PredictionServer(service, host, port, workers=workers,
+                            max_queue=max_queue,
+                            latency_budget_us=latency_budget_us)

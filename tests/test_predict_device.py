@@ -1,0 +1,129 @@
+"""Device-resident batch prediction (PR-8).
+
+The min-cut closed form (§5.3.2) runs as a jax kernel — integer matmul
+against device-resident candidate masks plus an exact integer
+cross-multiplication argmax — and must stay *bit-identical* to the
+scalar reference ``core/predictor.predict`` on randomized blocks for
+every simulated uarch. The numpy backend is the always-available
+fallback and must agree too.
+"""
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core.engine import Campaign
+from repro.core.isa import TEST_ISA
+from repro.core.lp import cut_matrices, union_closure
+from repro.core.predictor import predict
+from repro.core.simulator import SimMachine
+from repro.core.uarch import SIM_UARCHES
+from repro.service.batch_predictor import BatchPredictor
+from repro.service.workload import random_blocks
+
+NAMES = ["ADD_R64_R64", "IMUL_R64_R64", "MUL_R64", "ADC_R64_R64", "CMC",
+         "TEST_R64_R64", "SHLD_R64_R64_I8", "MOVQ2DQ_X_X", "AESDEC_X_X",
+         "PSHUFD_X_X", "PADDD_X_X", "MOV_R64_M64"]
+
+
+@pytest.fixture(scope="module")
+def all_models():
+    machines = [SimMachine(ua, TEST_ISA) for ua in SIM_UARCHES.values()]
+    return Campaign(instr_names=NAMES).run(machines, TEST_ISA).models
+
+
+def _bits(p):
+    """Exact bit pattern of every float field — equality stricter than ==
+    (distinguishes -0.0, would catch any ulp drift)."""
+    return struct.pack("<4d", p.cycles, p.port_bound, p.latency_bound,
+                       p.frontend_bound) + struct.pack(
+        f"<{len(p.port_pressure)}d", *p.port_pressure.values())
+
+
+def test_cut_matrices_encode_subset_relation():
+    combos = [frozenset({"p0"}), frozenset({"p1", "p5"}),
+              frozenset({"p0", "p1"})]
+    cand = union_closure(combos)
+    mask, sizes = cut_matrices(combos, cand)
+    assert mask.shape == (len(combos), len(cand))
+    assert mask.dtype == np.int32 and sizes.dtype == np.int32
+    for c, combo in enumerate(combos):
+        for s, candidate in enumerate(cand):
+            assert mask[c, s] == (1 if combo <= candidate else 0)
+    assert list(sizes) == [len(c) for c in cand]
+
+
+def test_numpy_backend_bit_identical_all_uarches(all_models):
+    for name, model in all_models.items():
+        bp = BatchPredictor(model, TEST_ISA, backend="numpy")
+        blocks = random_blocks(model, TEST_ISA, 50, seed=101, max_len=8)
+        got = bp.predict_batch(blocks)
+        for code, g in zip(blocks, got):
+            ref = predict(model, TEST_ISA, code)
+            assert g == ref and _bits(g) == _bits(ref), (name, code)
+        st = bp.backend_stats()
+        assert st["backend"] == "numpy"
+        assert st["numpy_waves"] >= 1 and st["device_waves"] == 0
+
+
+def test_jax_backend_bit_identical_all_uarches(all_models):
+    pytest.importorskip("jax")
+    for name, model in all_models.items():
+        bp = BatchPredictor(model, TEST_ISA, backend="jax",
+                            min_device_blocks=1)
+        for seed, n in ((7, 64), (8, 5)):  # two shape buckets
+            blocks = random_blocks(model, TEST_ISA, n, seed=seed, max_len=8)
+            got = bp.predict_batch(blocks)
+            for code, g in zip(blocks, got):
+                ref = predict(model, TEST_ISA, code)
+                assert g == ref and _bits(g) == _bits(ref), (name, code)
+        st = bp.backend_stats()
+        assert st["backend"] == "jax"
+        assert st["device_waves"] >= 1 and st["device_blocks"] >= 64
+        assert st["device_compiles"] >= 1
+
+
+def test_small_waves_stay_on_host(all_models):
+    pytest.importorskip("jax")
+    model = all_models["sim_skl"]
+    bp = BatchPredictor(model, TEST_ISA, backend="jax")  # default threshold
+    blocks = random_blocks(model, TEST_ISA, 4, seed=3)
+    assert [p == predict(model, TEST_ISA, b)
+            for b, p in zip(blocks, bp.predict_batch(blocks))] == [True] * 4
+    st = bp.backend_stats()
+    assert st["device_waves"] == 0 and st["numpy_waves"] >= 1
+
+
+def test_backend_env_knob_and_validation(all_models, monkeypatch):
+    model = all_models["sim_skl"]
+    monkeypatch.setenv("REPRO_PREDICT_BACKEND", "numpy")
+    assert BatchPredictor(model, TEST_ISA).backend == "numpy"
+    monkeypatch.delenv("REPRO_PREDICT_BACKEND")
+    assert BatchPredictor(model, TEST_ISA).backend in ("numpy", "jax")
+    with pytest.raises(ValueError):
+        BatchPredictor(model, TEST_ISA, backend="cuda")
+
+
+def test_non_integer_usage_falls_back_to_numpy(all_models):
+    pytest.importorskip("jax")
+    import copy
+
+    model = copy.copy(all_models["sim_skl"])
+    model.instructions = dict(model.instructions)
+    im = copy.deepcopy(model.instructions["ADD_R64_R64"])
+    # poison one μop count: the integer-exactness guard must route the
+    # whole wave to the numpy path (which handles floats exactly enough
+    # for the closed form's float64 sums)
+    pc = next(iter(im.port_usage.usage))
+    im.port_usage.usage[pc] = im.port_usage.usage[pc] + 0.5
+    model.instructions["ADD_R64_R64"] = im
+    bp = BatchPredictor(model, TEST_ISA, backend="jax", min_device_blocks=1)
+    from repro.core.simulator import Instr
+    blocks = random_blocks(model, TEST_ISA, 39, seed=11)
+    blocks.append([Instr("ADD_R64_R64", {"op1": "R0", "op2": "R1"})])
+    got = bp.predict_batch(blocks)
+    for code, g in zip(blocks, got):
+        assert g == predict(model, TEST_ISA, code)
+    st = bp.backend_stats()
+    assert st["device_fallbacks"] + st["numpy_waves"] >= 1
+    assert st["device_waves"] == 0 or st["device_fallbacks"] >= 1

@@ -1,0 +1,468 @@
+"""Binary wire protocol + front-door behaviors (PR-8 serving tier).
+
+The load-bearing guarantees:
+  * the binary and JSON wires produce *byte-identical* prediction
+    payloads against one server (canonical JSON, trace ids aside);
+  * malformed / truncated binary frames come back as structured errors
+    without killing the server (recoverable ones keep the connection);
+  * the generic tag codec and the specialized predict_batch codecs are
+    exact round trips on randomized values and blocks;
+  * overload sheds typed ``Overloaded`` errors through a bounded queue;
+  * client timeouts / resets surface as typed ``ServiceUnavailable``
+    after a bounded retry budget;
+  * the access log rotates by size, the sharded cache keeps legacy
+    aggregate stats, and the exact-request wave cache revalidates on
+    model reload.
+"""
+import json
+import os
+import random
+import socket
+import struct
+import threading
+import time
+
+import pytest
+
+from repro.core import model_io
+from repro.core.engine import Campaign
+from repro.core.isa import TEST_ISA
+from repro.core.predictor import predict
+from repro.core.simulator import Instr, SimMachine
+from repro.core.uarch import SIM_SKL
+from repro.obs.metrics import Histogram
+from repro.service import protocol
+from repro.service.client import (ServiceClient, ServiceOverloaded,
+                                  ServiceUnavailable)
+from repro.service.protocol import prediction_to_dict
+from repro.service.registry import ModelRegistry
+from repro.service.server import (AdmissionController, PredictionServer,
+                                  PredictionService, ShardedLRU,
+                                  ThreadedPredictionServer)
+from repro.service.workload import random_blocks
+
+NAMES = ["ADD_R64_R64", "IMUL_R64_R64", "MUL_R64", "CMC", "TEST_R64_R64",
+         "AESDEC_X_X", "PSHUFD_X_X", "MOV_R64_M64"]
+
+
+@pytest.fixture(scope="module")
+def skl_model():
+    machine = SimMachine(SIM_SKL, TEST_ISA)
+    return Campaign(instr_names=NAMES).run([machine],
+                                           TEST_ISA).models[machine.name]
+
+
+@pytest.fixture(scope="module")
+def model_dir(skl_model, tmp_path_factory):
+    out = tmp_path_factory.mktemp("models")
+    (out / "sim_skl.xml").write_text(model_io.to_xml(skl_model, TEST_ISA))
+    return out
+
+
+def _canon(envs):
+    return json.dumps([{k: v for k, v in e.items() if k != "trace_id"}
+                       for e in envs], sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# codecs: tag values and the specialized predict_batch frames
+# ---------------------------------------------------------------------------
+
+
+def _random_value(rng, depth=0):
+    kinds = ["none", "bool", "int", "float", "str", "bytes"]
+    if depth < 3:
+        kinds += ["list", "dict"]
+    k = rng.choice(kinds)
+    if k == "none":
+        return None
+    if k == "bool":
+        return rng.random() < 0.5
+    if k == "int":
+        return rng.choice([0, 1, -1, rng.randrange(-2**40, 2**40),
+                           2**63 - 1, -2**63])
+    if k == "float":
+        return rng.choice([0.0, -0.0, 1.5, float("inf"),
+                           rng.uniform(-1e12, 1e12)])
+    if k == "str":
+        return "".join(rng.choice("abπ∞\n\"\\x") for _ in range(
+            rng.randrange(8)))
+    if k == "bytes":
+        return bytes(rng.randrange(256) for _ in range(rng.randrange(8)))
+    if k == "list":
+        return [_random_value(rng, depth + 1) for _ in range(rng.randrange(4))]
+    return {f"k{j}": _random_value(rng, depth + 1)
+            for j in range(rng.randrange(4))}
+
+
+def test_value_codec_roundtrip_seeded():
+    rng = random.Random(7)
+    for _ in range(300):
+        v = _random_value(rng)
+        assert protocol.unpack_value(protocol.pack_value(v)) == v
+
+
+def test_value_codec_roundtrip_hypothesis():
+    """Property-based variant when hypothesis is installed (the seeded
+    fuzz above always runs)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    values = st.recursive(
+        st.none() | st.booleans() | st.integers(-2**63, 2**63 - 1)
+        | st.floats(allow_nan=False) | st.text(max_size=16)
+        | st.binary(max_size=16),
+        lambda c: st.lists(c, max_size=4)
+        | st.dictionaries(st.text(max_size=8), c, max_size=4),
+        max_leaves=12)
+
+    @hyp.settings(max_examples=100, deadline=None)
+    @hyp.given(values)
+    def inner(v):
+        assert protocol.unpack_value(protocol.pack_value(v)) == v
+
+    inner()
+
+
+def test_predict_batch_request_roundtrip(skl_model):
+    rng = random.Random(13)
+    for trial in range(20):
+        blocks = random_blocks(skl_model, TEST_ISA, rng.randrange(1, 12),
+                               seed=trial)
+        packed = tuple(protocol.instrs_to_packed(b) for b in blocks)
+        budget = rng.choice([0, 1, 2500, 10**7])
+        payload = protocol.encode_predict_batch("sim_skl", packed, budget)
+        ua, got_budget, got = protocol.decode_predict_batch(payload)
+        assert (ua, got_budget, got) == ("sim_skl", budget, packed)
+        # packed form is lossless back to Instr objects
+        for b, pb in zip(blocks, packed):
+            assert protocol.packed_to_instrs(pb) == b
+
+
+def test_response_codec_preserves_envelope_shapes(skl_model):
+    blocks = random_blocks(skl_model, TEST_ISA, 6, seed=3)
+    preds = [predict(skl_model, TEST_ISA, b) for b in blocks]
+    envs = [{"ok": True, "uarch": "sim_skl",
+             "result": prediction_to_dict(p)} for p in preds]
+    err = {"ok": False, "error": {"type": "UnknownInstructionError",
+                                  "message": "nope", "missing": ["X"]}}
+    port_names = sorted({p for e in envs
+                         for p in e["result"]["port_pressure"]})
+    pidx = {p: i for i, p in enumerate(port_names)}
+    chunks = [protocol.encode_pred_chunk(e, pidx) for e in envs]
+    chunks.append(protocol.encode_error_chunk(err))
+    payload = protocol.encode_predict_batch_resp("a" * 16, "sim_skl",
+                                                 port_names, chunks)
+    out = protocol.decode_predict_batch_resp(payload)
+    assert len(out) == len(envs) + 1
+    for e, got in zip(envs, out):
+        assert got == {**e, "trace_id": "a" * 16}
+    # the error envelope gains only trace_id — no phantom "uarch" key
+    assert out[-1] == {**err, "trace_id": "a" * 16}
+
+
+def test_read_frame_rejects_garbage():
+    import io
+
+    with pytest.raises(protocol.BinaryProtocolError):
+        protocol.read_frame(io.BytesIO(b"\x00\x01\x00\x00\x00\x00"))
+    oversize = struct.pack(">BBI", protocol.BINARY_MAGIC, protocol.K_MSG,
+                           protocol.MAX_FRAME + 1)
+    with pytest.raises(protocol.BinaryProtocolError):
+        protocol.read_frame(io.BytesIO(oversize))
+    # truncated mid-frame: a ConnectionError, not silence
+    good = protocol.frame(protocol.K_MSG, b"x" * 32)
+    with pytest.raises(ConnectionError):
+        protocol.read_frame(io.BytesIO(good[:10]))
+    assert protocol.read_frame(io.BytesIO(b"")) is None  # clean EOF
+
+
+# ---------------------------------------------------------------------------
+# negotiation + payload identity
+# ---------------------------------------------------------------------------
+
+
+def test_both_wires_byte_identical_payloads(model_dir, skl_model):
+    blocks = random_blocks(skl_model, TEST_ISA, 40, seed=29)
+    ref = _canon([{"ok": True, "uarch": "sim_skl",
+                   "result": prediction_to_dict(
+                       predict(skl_model, TEST_ISA, b))} for b in blocks])
+    svc = PredictionService(ModelRegistry(model_dir))
+    with PredictionServer(svc) as server:
+        with ServiceClient(server.host, server.port, wire="json") as cj, \
+                ServiceClient(server.host, server.port, wire="auto") as cb:
+            assert cj.wire == "json"
+            assert cb.wire == "binary"  # auto negotiates binary here
+            for _ in range(3):  # cold, warm (cached segments), wave-cache
+                assert _canon(cj.predict_batch("sim_skl", blocks)) == ref
+                assert _canon(cb.predict_batch("sim_skl", blocks)) == ref
+        assert svc.wave_cache.stats()["hits"] >= 1
+        st = svc.stats()
+        assert st["wire"]["binary_conns"] >= 1
+        assert st["wire"]["json_conns"] >= 1
+        assert "wave_cache" in st and "admission" in st
+
+
+def test_auto_falls_back_to_json_on_legacy_server(model_dir, skl_model):
+    blocks = random_blocks(skl_model, TEST_ISA, 8, seed=31)
+    with ThreadedPredictionServer(
+            PredictionService(ModelRegistry(model_dir))) as server:
+        with ServiceClient(server.host, server.port, wire="auto") as c:
+            assert c.wire == "json"
+            envs = c.predict_batch("sim_skl", blocks)
+            assert all(e["ok"] for e in envs)
+        with pytest.raises(ServiceUnavailable):
+            ServiceClient(server.host, server.port, wire="binary")
+
+
+def test_wave_cache_revalidates_on_reload(model_dir, skl_model):
+    blocks = random_blocks(skl_model, TEST_ISA, 6, seed=37)
+    svc = PredictionService(ModelRegistry(model_dir))
+    with PredictionServer(svc) as server:
+        with ServiceClient(server.host, server.port, wire="binary") as c:
+            first = _canon(c.predict_batch("sim_skl", blocks))
+            assert _canon(c.predict_batch("sim_skl", blocks)) == first
+            hits = svc.wave_cache.stats()["hits"]
+            assert hits >= 1
+            # rewrite the artifact (same content, new mtime): version bumps
+            path = model_dir / "sim_skl.xml"
+            st = path.stat()
+            path.write_text(model_io.to_xml(skl_model, TEST_ISA))
+            os.utime(path, ns=(st.st_mtime_ns + 10**9,
+                               st.st_mtime_ns + 10**9))
+            c.reload("sim_skl")
+            # stale wave entry is rejected by its version, then recomputed
+            assert _canon(c.predict_batch("sim_skl", blocks)) == first
+            assert _canon(c.predict_batch("sim_skl", blocks)) == first
+
+
+# ---------------------------------------------------------------------------
+# malformed frames
+# ---------------------------------------------------------------------------
+
+
+def _binary_conn(server):
+    sock = socket.create_connection((server.host, server.port), timeout=10)
+    rfile = sock.makefile("rb")
+    sock.sendall(protocol.hello_frame())
+    kind, payload = protocol.read_frame(rfile)
+    assert kind == protocol.K_HELLO_ACK
+    return sock, rfile
+
+
+def test_malformed_frames_keep_connection(model_dir):
+    with PredictionServer(
+            PredictionService(ModelRegistry(model_dir))) as server:
+        sock, rfile = _binary_conn(server)
+        # garbage payload in a known kind: structured error, conn lives
+        sock.sendall(protocol.frame(protocol.K_PREDICT_BATCH, b"\xff\xff"))
+        kind, payload = protocol.read_frame(rfile)
+        env = protocol.unpack_value(payload)
+        assert env["ok"] is False
+        assert env["error"]["type"] == "BinaryProtocolError"
+        # unknown frame kind: structured error, conn lives
+        sock.sendall(protocol.frame(200, b""))
+        kind, payload = protocol.read_frame(rfile)
+        assert protocol.unpack_value(payload)["error"]["type"] == \
+            "BinaryProtocolError"
+        # the same connection still serves good requests
+        sock.sendall(protocol.frame(
+            protocol.K_MSG, protocol.pack_value({"op": "ping"})))
+        kind, payload = protocol.read_frame(rfile)
+        pong = protocol.unpack_value(payload)
+        assert pong["ok"] is True and pong["result"] == "pong"
+        sock.close()
+        assert server.wire_counts["bad_frames"] >= 2
+
+
+def test_frame_desync_errors_and_closes(model_dir):
+    with PredictionServer(
+            PredictionService(ModelRegistry(model_dir))) as server:
+        sock, rfile = _binary_conn(server)
+        sock.sendall(b"\x00garbage-without-magic")
+        kind, payload = protocol.read_frame(rfile)
+        env = protocol.unpack_value(payload)
+        assert env["ok"] is False
+        assert "desync" in env["error"]["message"]
+        assert rfile.read(1) == b""  # server closed: cannot resync
+        sock.close()
+        # a truncated frame (EOF mid-payload) must not wedge the server
+        sock2 = socket.create_connection((server.host, server.port),
+                                         timeout=10)
+        sock2.sendall(protocol.hello_frame()[:3])
+        sock2.close()
+        with ServiceClient(server.host, server.port) as c:
+            assert c.ping()
+
+
+def test_unsupported_binary_version_is_rejected(model_dir):
+    with PredictionServer(
+            PredictionService(ModelRegistry(model_dir))) as server:
+        sock = socket.create_connection((server.host, server.port),
+                                        timeout=10)
+        rfile = sock.makefile("rb")
+        sock.sendall(protocol.frame(protocol.K_HELLO, bytes([99]) + b"\n"))
+        kind, payload = protocol.read_frame(rfile)
+        env = protocol.unpack_value(payload)
+        assert env["ok"] is False
+        assert "version" in env["error"]["message"]
+        sock.close()
+
+
+# ---------------------------------------------------------------------------
+# admission control / shedding
+# ---------------------------------------------------------------------------
+
+
+def test_admission_controller_sheds_bounded():
+    ac = AdmissionController(workers=1, max_queue=0)
+    assert ac.try_admit() is None
+    assert ac.try_admit() == "queue_full"  # queue bound is hard
+    env = ac.overloaded_env("queue_full")
+    assert env["error"]["type"] == "Overloaded"
+    assert env["error"]["reason"] == "queue_full"
+    assert env["error"]["retry_after_ms"] > 0
+    ac.release(0.002)
+    assert ac.try_admit() is None
+    st = ac.stats()
+    assert st["shed_queue_full"] == 1 and st["admitted"] == 2
+    assert st["peak_inflight"] <= st["workers"] + st["max_queue"]
+    # budget-based shed: estimated sojourn exceeds the request budget
+    ac2 = AdmissionController(workers=1, max_queue=10, budget_us=1.0)
+    assert ac2.try_admit() is None
+    assert ac2.try_admit() is None       # first queued slot is free
+    assert ac2.try_admit() == "budget"   # (q+1)*ewma blows the 1us budget
+    assert ac2.stats()["shed_budget"] == 1
+
+
+def test_server_sheds_typed_overloaded(model_dir, skl_model):
+    svc = PredictionService(ModelRegistry(model_dir))
+    with PredictionServer(svc, workers=1, max_queue=0) as server:
+        shed = threading.Semaphore(0)
+        errors = []
+
+        def hammer(seed):
+            rng = random.Random(seed)
+            try:
+                with ServiceClient(server.host, server.port,
+                                   wire="json") as c:
+                    for i in range(12):
+                        blocks = [[Instr("IMUL_R64_R64",
+                                         {"op1": f"R{rng.randrange(16)}",
+                                          "op2": f"R{i}"})]
+                                  for _ in range(16)]
+                        try:
+                            c.predict_batch("sim_skl", blocks)
+                        except ServiceOverloaded as e:
+                            assert e.error["reason"] == "queue_full"
+                            assert e.error["retry_after_ms"] >= 0
+                            shed.release()
+            except Exception as e:  # pragma: no cover - surfaced below
+                errors.append(e)
+
+        threads = [threading.Thread(target=hammer, args=(s,))
+                   for s in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert not errors
+        adm = server.admission.stats()
+        assert shed.acquire(blocking=False), adm
+        assert adm["shed"] > 0
+        assert adm["peak_inflight"] <= adm["workers"] + adm["max_queue"]
+        # the server still answers normally after the storm
+        with ServiceClient(server.host, server.port) as c:
+            assert c.ping()
+            assert svc.stats()["admission"]["shed"] > 0
+
+
+# ---------------------------------------------------------------------------
+# client robustness
+# ---------------------------------------------------------------------------
+
+
+def test_connect_failure_is_service_unavailable():
+    sock = socket.socket()
+    sock.bind(("127.0.0.1", 0))
+    port = sock.getsockname()[1]
+    sock.close()  # nothing listens here any more
+    t0 = time.perf_counter()
+    with pytest.raises(ServiceUnavailable):
+        ServiceClient("127.0.0.1", port, timeout=2, retries=2,
+                      backoff_s=0.01)
+    assert time.perf_counter() - t0 < 10
+
+
+def test_read_timeout_is_service_unavailable():
+    silent = socket.socket()
+    silent.bind(("127.0.0.1", 0))
+    silent.listen(4)
+    port = silent.getsockname()[1]
+    accepted = []
+
+    def accept_loop():
+        try:
+            while True:
+                conn, _ = silent.accept()
+                accepted.append(conn)  # accept, then say nothing
+        except OSError:
+            pass
+
+    t = threading.Thread(target=accept_loop, daemon=True)
+    t.start()
+    try:
+        client = ServiceClient("127.0.0.1", port, timeout=0.3, wire="json",
+                               retries=0)
+        with pytest.raises(ServiceUnavailable):
+            client.ping()
+        client.close()
+    finally:
+        silent.close()
+        for c in accepted:
+            c.close()
+
+
+# ---------------------------------------------------------------------------
+# access-log rotation, sharded cache, histogram bulk observe
+# ---------------------------------------------------------------------------
+
+
+def test_access_log_rotates_by_size(model_dir, tmp_path):
+    log = tmp_path / "access.log"
+    svc = PredictionService(ModelRegistry(model_dir), access_log=str(log),
+                            access_log_max_bytes=400)
+    for i in range(12):
+        svc.predict("sim_skl", [Instr("CMC", {})])
+    svc.close()
+    rolled = tmp_path / "access.log.1"
+    assert rolled.exists()
+    assert rolled.stat().st_size >= 400
+    # the current file restarts small (it may not exist yet if the very
+    # last write was the one that rotated)
+    assert not log.exists() or log.stat().st_size < 400 + 300
+    for line in rolled.read_text().splitlines():
+        rec = json.loads(line)
+        assert rec["endpoint"] == "predict"
+
+
+def test_sharded_lru_semantics():
+    lru = ShardedLRU(capacity=16, shards=4)
+    for i in range(40):
+        lru.put(("k", i), i)
+    assert len(lru) <= 16 + 3  # per-shard ceil rounding
+    got = lru.get_many([("k", i) for i in range(40)])
+    assert sum(1 for g in got if g is not None) == len(lru)
+    st = lru.stats()
+    assert {"size", "capacity", "hits", "misses", "hit_rate"} <= set(st)
+    assert len(st["shards"]) == 4
+    assert sum(s["hits"] for s in st["shards"]) == st["hits"]
+    assert lru.get(("missing",)) is None
+
+
+def test_histogram_observe_many_matches_loop():
+    a, b = Histogram("a"), Histogram("b")
+    for v, n in ((1.5, 3), (0.25, 5), (9.0, 1)):
+        a.observe_many(v, n)
+        for _ in range(n):
+            b.observe(v)
+    assert a.snapshot() == b.snapshot()
