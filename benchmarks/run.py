@@ -35,6 +35,10 @@ a human-readable table per benchmark. Paper mapping:
                             this into benchmarks.smoke.json)
   bench_wave_fusion         per-instruction (legacy) vs scheduler-fused
                             characterization across SIM_UARCHES
+  bench_corpus_eval         corpus-evaluation throughput: seeded block
+                            corpus through fused mega-waves at several
+                            wave widths, numpy vs jax wave backend, cold
+                            vs warm lowering/jit caches
   bench_hardware_corpus     §6.2-analogue — real-JAX op corpus wall-clock
   bench_kernel_contention   blocking-kernel unit attribution harness
   table_roofline            §Roofline — dry-run roofline summary (if runs
@@ -1410,6 +1414,80 @@ def bench_service_saturation(smoke: bool = False):
     })
 
 
+CORPUS_EVAL_STATS: dict = {}
+
+
+def bench_corpus_eval(smoke: bool = False):
+    """Corpus-evaluation throughput: a seeded block corpus streamed
+    through ``BatchPredictor.simulate_batch`` as fused mega-waves.
+    Sweeps wave width × wave backend (numpy vs jax); each cell runs
+    twice in-process so the second run sees warm lowering/jit caches
+    (the first jax cell pays the cold compile)."""
+    import shutil
+    import tempfile
+
+    from repro.core.characterize import characterize
+    from repro.core.isa import TEST_ISA
+    from repro.core.simulator import SimMachine
+    from repro.core.uarch import SIM_UARCHES
+    from repro.corpus import CorpusSpec, evaluate_corpus, generate_corpus
+    from repro.corpus.store import load_manifest, read_shard
+    from repro.service.protocol import parse_block
+
+    blocks = 128 if smoke else 2048
+    widths = (32, 128) if smoke else (512, 2048, 8192)
+    tmp = Path(tempfile.mkdtemp(prefix="bench_corpus_"))
+    try:
+        spec = CorpusSpec(seed=0, blocks_per_uarch=blocks,
+                          uarches=("sim_skl",),
+                          shard_size=max(16, blocks // 8))
+        _, gen_us = _timed(lambda: generate_corpus(tmp / "corpus", spec))
+        emit("corpus_generate", gen_us / blocks, f"blocks={blocks}")
+
+        # characterize once (numpy oracle) so every cell measures wave
+        # throughput, not model inference
+        man = load_manifest(tmp / "corpus")
+        used = sorted({ins.spec for s in man["shards"]
+                       for r in read_shard(tmp / "corpus", s)
+                       for ins in parse_block(r["block"])})
+        model = characterize(SimMachine(SIM_UARCHES["sim_skl"], TEST_ISA),
+                             TEST_ISA, used)
+        models = {"sim_skl": model}
+
+        print("\n== corpus evaluation: fused mega-wave throughput ==")
+        print(f"{'backend':8s} {'wave':>6s} {'cold_s':>8s} {'warm_s':>8s} "
+              f"{'waves':>6s} {'max_w':>6s} {'blk/s':>8s}")
+        rows = []
+        for backend in ("numpy", "jax"):
+            for width in widths:
+                runs = []
+                for phase in ("cold", "warm"):
+                    out = tmp / f"r_{backend}_{width}_{phase}"
+                    res, us = _timed(lambda out=out: evaluate_corpus(
+                        tmp / "corpus", backend=backend, wave_width=width,
+                        out_dir=out, resume=False, models=models))
+                    runs.append((us, res))
+                (cold_us, res), (warm_us, _) = runs
+                ws = res["wave_stats"]
+                bps = blocks / (warm_us / 1e6)
+                rows.append({"backend": backend, "wave_width": width,
+                             "cold_s": round(cold_us / 1e6, 3),
+                             "warm_s": round(warm_us / 1e6, 3),
+                             "waves": ws["waves"],
+                             "max_wave_width": ws["max_wave_width"],
+                             "blocks_per_s_warm": round(bps, 1)})
+                print(f"{backend:8s} {width:>6d} {cold_us / 1e6:>8.3f} "
+                      f"{warm_us / 1e6:>8.3f} {ws['waves']:>6d} "
+                      f"{ws['max_wave_width']:>6d} {bps:>8.1f}")
+                emit(f"corpus_eval_{backend}_w{width}", warm_us / blocks,
+                     f"blocks={blocks};waves={ws['waves']};"
+                     f"cold_s={cold_us / 1e6:.3f}")
+        CORPUS_EVAL_STATS.update({"smoke": smoke, "blocks": blocks,
+                                  "widths": list(widths), "rows": rows})
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def table_roofline():
     from repro.analysis.roofline import full_table, markdown_table
 
@@ -1443,6 +1521,7 @@ BENCHES = {
     "bench_campaign_cache": bench_campaign_cache,
     "bench_service_throughput": bench_service_throughput,
     "bench_service_saturation": bench_service_saturation,
+    "bench_corpus_eval": bench_corpus_eval,
     "bench_hardware_corpus": bench_hardware_corpus,
     "bench_kernel_contention": bench_kernel_contention,
     "table_roofline": table_roofline,
@@ -1470,7 +1549,8 @@ def main(argv=None) -> None:
         fn = BENCHES[name]
         if name in ("bench_batch_sim", "bench_backend_matrix",
                     "bench_trace_overhead", "bench_device_scaling",
-                    "bench_characterize", "bench_service_saturation"):
+                    "bench_characterize", "bench_service_saturation",
+                    "bench_corpus_eval"):
             fn(smoke=args.smoke)
         else:
             fn()
@@ -1490,6 +1570,7 @@ def main(argv=None) -> None:
         "device_scaling": DEVICE_SCALING_STATS,
         "characterize": CHARACTERIZE_STATS,
         "wave_fusion": WAVE_FUSION_STATS,
+        "corpus_eval": CORPUS_EVAL_STATS,
     }
     if args.only or args.smoke:
         # partial/smoke runs must not clobber the full record

@@ -22,6 +22,14 @@ README §Observability) and the output is the per-wave bottleneck
 attribution table from repro.analysis.wave_report::
 
     PYTHONPATH=src python scripts/analyze.py --trace-report run.trace.json
+
+With --corpus-report, the argument is a corpus accuracy artifact
+(experiments/corpus_accuracy.json, written by
+``python -m repro.corpus evaluate``) and the output is the per-uarch
+MAPE / Kendall-τ / error-bucket tables from repro.corpus.score::
+
+    PYTHONPATH=src python scripts/analyze.py --corpus-report \\
+        experiments/corpus_accuracy.json
 """
 from __future__ import annotations
 
@@ -76,8 +84,20 @@ def main(argv=None) -> int:
     ap.add_argument("--top-waves", type=int, default=5, metavar="K",
                     help="slowest waves to list in --trace-report "
                          "(default 5)")
+    ap.add_argument("--corpus-report", metavar="ACCURACY",
+                    help="render a corpus accuracy artifact "
+                         "(corpus_accuracy.json) instead of predicting "
+                         "a block")
     args = ap.parse_args(argv)
 
+    if args.corpus_report:
+        from repro.corpus import format_report  # noqa: PLC0415
+        rep = json.loads(Path(args.corpus_report).read_text())
+        if args.as_json:
+            print(json.dumps(rep, sort_keys=True, indent=1))
+        else:
+            print(format_report(rep))
+        return 0
     if args.trace_report:
         from repro.analysis.wave_report import (  # noqa: PLC0415
             format_wave_report, report_from_file)
@@ -88,7 +108,8 @@ def main(argv=None) -> int:
             print(format_wave_report(rep))
         return 0
     if not args.block:
-        ap.error("a block file is required unless --trace-report is given")
+        ap.error("a block file is required unless --trace-report or "
+                 "--corpus-report is given")
 
     text = (sys.stdin.read() if args.block == "-"
             else Path(args.block).read_text())

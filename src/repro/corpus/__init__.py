@@ -1,0 +1,58 @@
+"""BHive-style basic-block corpus: generation, ground truth, scoring.
+
+The paper validates its inferred models instruction-by-instruction; the
+tools it enables (uiCA, PALMED — see PAPERS.md) are judged on large
+basic-block *corpora* with MAPE and Kendall-τ per microarchitecture. This
+package is that workload, end to end:
+
+* :mod:`repro.corpus.generate` — a seeded, stratified block generator
+  (dependency-chain-heavy, port-pressure-heavy, mixed, divider-heavy and
+  elimination/zero-idiom families, sampled per uarch from the variants the
+  uarch actually implements). Deterministic: one seed → byte-identical
+  corpus.
+* :mod:`repro.corpus.store` — the sharded JSONL corpus format plus a
+  content-addressed ``manifest.json`` (per-shard sha256, corpus id over
+  the shard hashes) so any consumer can verify what it is reading.
+* :mod:`repro.corpus.evaluate` — the ground-truth driver: corpus shards
+  stream through ``BatchPredictor.simulate_batch`` as fused mega-waves
+  (shards are packed until the wave-width target is met, the engine cache
+  dedups across shards), with per-shard result files written atomically so
+  a killed run resumes warm.
+* :mod:`repro.corpus.score` — per-uarch MAPE, Kendall-τ (tau-b, exact)
+  and relative-error bucket drill-downs of the closed-form predictor
+  against the simulator ground truth.
+* :mod:`repro.corpus.jit_ops` — the real-JAX jitted-op corpus (matmul
+  tiles, elementwise, reductions, fused layers) that the hardware backend
+  characterizes; folded in from the old ``repro.ops.corpus`` stub so
+  "corpus" means one thing in the tree.
+
+``python -m repro.corpus generate|evaluate|report`` drives the pipeline
+from the command line; ``scripts/analyze.py --corpus-report`` renders the
+accuracy artifact. The service's bulk ``predict_corpus`` op (see
+``repro.service``) streams per-shard closed-form predictions so scoring
+can run against a live server — byte-identical to the in-process path.
+"""
+from repro.corpus.evaluate import client_predict_fn, evaluate_corpus
+from repro.corpus.generate import (FAMILIES, CorpusSpec, generate_blocks,
+                                   generate_corpus)
+from repro.corpus.score import (error_buckets, format_report, kendall_tau,
+                                mape, score_pairs, score_results)
+from repro.corpus.store import (corpus_id, iter_shard_blocks, load_manifest,
+                                shard_records, write_corpus)
+
+__all__ = [
+    "FAMILIES", "CorpusSpec", "generate_blocks", "generate_corpus",
+    "build_jit_corpus", "client_predict_fn", "error_buckets",
+    "evaluate_corpus", "format_report",
+    "kendall_tau", "mape", "score_pairs", "score_results", "corpus_id",
+    "iter_shard_blocks", "load_manifest", "shard_records", "write_corpus",
+]
+
+
+def __getattr__(name):
+    # the jitted-op corpus drags the jax import along — load it lazily so
+    # block-corpus users (service, tests, CLI) stay light
+    if name == "build_jit_corpus":
+        from repro.corpus.jit_ops import build_jit_corpus
+        return build_jit_corpus
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,58 @@
+"""The real-JAX op corpus: jitted ops the hardware backend characterizes.
+
+Folded in from the old ``repro.ops.corpus`` stub (which now re-exports
+from here) so "corpus" lives in one package: this is the
+hardware-instruction-set analogue of the basic-block corpus — a set of
+jitted ops (matmul tiles, elementwise, reductions, layout ops, fused
+layers) with analytic FLOP counts, consumed by ``bench_hardware_corpus``
+and the hardware characterization path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def build_jit_corpus(sizes=(128, 256, 512)) -> dict:
+    """name -> (shape-preserving fn, example arg, flops per application)."""
+    corpus = {}
+    for n in sizes:
+        x = jnp.ones((n, n), jnp.float32) * 0.5
+
+        def mm(v):
+            return (v @ v) * (1.0 / n)  # normalized to stay finite
+
+        corpus[f"matmul_{n}x{n}_f32"] = (mm, x, 2.0 * n * n * n)
+        xb = x.astype(jnp.bfloat16)
+        corpus[f"matmul_{n}x{n}_bf16"] = (mm, xb, 2.0 * n * n * n)
+    v = jnp.linspace(0.1, 1.0, 1 << 16)
+    corpus["add_vec_64k"] = (lambda t: t + 1.5, v, 1 << 16)
+    corpus["mul_vec_64k"] = (lambda t: t * 1.0001, v, 1 << 16)
+    corpus["fma_vec_64k"] = (lambda t: t * 0.999 + 0.01, v, 2 << 16)
+    corpus["exp_vec_64k"] = (lambda t: jnp.exp(t) * 0.3, v, 1 << 16)
+    corpus["rsqrt_vec_64k"] = (lambda t: jax.lax.rsqrt(t + 1.0), v, 1 << 16)
+    m = jnp.ones((256, 256), jnp.float32)
+    corpus["transpose_256"] = (lambda t: t.T + 0.0, m, 0.0)
+    corpus["reduce_sum_256"] = (
+        lambda t: t + jnp.sum(t, axis=1, keepdims=True) * 1e-6, m,
+        256 * 256)
+    corpus["softmax_256"] = (lambda t: jax.nn.softmax(t, axis=-1) + t * 0.5,
+                             m, 5 * 256 * 256)
+    idx = jnp.arange(256) % 128
+
+    def gather_op(t):
+        return t.at[idx].get() * 0.5 + t * 0.5
+
+    corpus["gather_256"] = (gather_op, m, 0.0)
+    w = jnp.ones((256,), jnp.float32)
+
+    def rmsnorm_op(t):
+        var = jnp.mean(t * t, axis=-1, keepdims=True)
+        return t * jax.lax.rsqrt(var + 1e-5) * w
+
+    corpus["rmsnorm_256"] = (rmsnorm_op, m, 4 * 256 * 256)
+    return corpus
+
+
+#: legacy name, kept for the repro.ops.corpus re-export
+build_corpus = build_jit_corpus

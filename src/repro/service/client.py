@@ -239,6 +239,80 @@ class ServiceClient:
             self._unwrap(envs[0] if envs else {"ok": False})
         return envs
 
+    def _read_stream(self, mode: str):
+        """Read one follow-up response of a streaming op. Unlike
+        :meth:`_exchange` there is no retry: replaying mid-stream is not
+        safe, so any transport trouble is a hard ServiceUnavailable."""
+        try:
+            if mode == "binary":
+                resp = protocol.read_frame(self._rfile)
+            else:
+                resp = self._rfile.readline() or None
+            if resp is None:
+                raise ConnectionError("server closed mid-stream")
+            return resp
+        except TimeoutError as e:
+            self.close()
+            raise ServiceUnavailable(
+                f"stream read timed out after {self.timeout}s") from e
+        except (ConnectionError, OSError) as e:
+            self.close()
+            raise ServiceUnavailable(
+                f"connection lost mid-stream: {e}") from e
+
+    def predict_corpus(self, uarch: str, shards, *,
+                       budget_us: float | None = None):
+        """Bulk corpus prediction: every shard in one request, responses
+        streamed back per shard. Returns ``(shard_envelopes, summary)``
+        where ``shard_envelopes[i]`` holds shard *i*'s per-block response
+        envelopes — or its single error envelope when that shard was shed
+        (typed ``Overloaded``) or failed; the stream carries on either
+        way. ``summary`` is the server's end-of-stream tally
+        (shards/blocks/errors/shed). Identical envelope payloads on either
+        wire."""
+        packed = [[self._as_packed_block(b) for b in shard]
+                  for shard in shards]
+        results: list = [None] * len(packed)
+        if self.wire == "binary":
+            raw = protocol.frame(
+                protocol.K_PREDICT_CORPUS,
+                protocol.encode_predict_corpus(uarch, packed,
+                                               int(budget_us or 0)))
+            kind, payload = self._exchange(raw, "binary")
+            while True:
+                if kind == protocol.K_PREDICT_CORPUS_SHARD:
+                    idx, envs = protocol.decode_corpus_shard(payload)
+                    results[idx] = envs
+                elif kind == protocol.K_PREDICT_CORPUS_END:
+                    return results, protocol.unpack_value(payload)
+                elif kind == protocol.K_RESP:
+                    # request-level error before any shard was served
+                    self._unwrap(protocol.unpack_value(payload))
+                    raise protocol.BinaryProtocolError(
+                        "non-error K_RESP inside a corpus stream")
+                else:
+                    raise protocol.BinaryProtocolError(
+                        f"unexpected frame kind {kind} in corpus stream")
+                kind, payload = self._read_stream("binary")
+        msg = {"op": "predict_corpus", "uarch": uarch,
+               "shards": [[protocol.packed_to_wire(pb) for pb in shard]
+                          for shard in packed]}
+        if budget_us:
+            msg["budget_us"] = budget_us
+        raw = json.dumps(msg, separators=(",", ":")).encode() + b"\n"
+        line = self._exchange(raw, "json")
+        while True:
+            env = json.loads(line)
+            if env.get("done"):
+                return results, env.get("result")
+            if "shard" not in env:
+                self._unwrap(env)  # request-level error: raises
+                raise ServiceError({"message": "malformed corpus stream "
+                                               "response (no shard index)"})
+            results[env["shard"]] = (env["result"] if env.get("ok")
+                                     else [env])
+            line = self._read_stream("json")
+
     def predict_all(self, block) -> dict:
         """The CLI's sweep: one prediction per served uarch."""
         return {ua: self.predict(ua, block, raw=True)

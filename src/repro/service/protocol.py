@@ -186,6 +186,9 @@ K_MSG = 3                 # generic request (tag-encoded dict)
 K_RESP = 4                # generic response (tag-encoded dict)
 K_PREDICT_BATCH = 5       # specialized bulk-wave request
 K_PREDICT_BATCH_RESP = 6  # specialized bulk-wave response
+K_PREDICT_CORPUS = 7        # bulk corpus request (many shards, one frame)
+K_PREDICT_CORPUS_SHARD = 8  # streamed per-shard response
+K_PREDICT_CORPUS_END = 9    # end-of-stream summary
 
 _HDR = struct.Struct(">BBI")
 
@@ -603,3 +606,97 @@ def decode_predict_batch_resp(payload):
         raise BinaryProtocolError(f"malformed predict_batch response: "
                                   f"{exc}") from None
     return envs
+
+
+# -- bulk corpus op (streamed per-shard responses) ---------------------------
+#
+# One K_PREDICT_CORPUS request frame carries every shard; the server
+# answers with one K_PREDICT_CORPUS_SHARD frame *per shard* (each shard
+# individually admission-controlled — a shed shard arrives as an error
+# envelope without aborting the stream) and closes the exchange with a
+# K_PREDICT_CORPUS_END summary. The per-shard payload embeds the
+# predict_batch codecs, so a corpus shard response is byte-for-byte the
+# bulk-wave response plus a shard index.
+#
+# request payload := varint budget_us | varint n_shards
+#                    | n_shards × (varint len, predict_batch payload)
+# shard payload   := varint shard_idx | u8 kind
+#                    kind 0: predict_batch_resp payload
+#                    kind 1: tag-encoded error envelope (shed / failure)
+# end payload     := tag-encoded summary dict
+
+
+def encode_predict_corpus(uarch: str, shards, budget_us: int = 0) -> bytes:
+    """``shards``: iterable of shard block lists (packed blocks each)."""
+    out = bytearray()
+    _pack_varint(out, budget_us)
+    chunks = [encode_predict_batch(uarch, shard) for shard in shards]
+    _pack_varint(out, len(chunks))
+    for c in chunks:
+        _pack_varint(out, len(c))
+        out += c
+    return bytes(out)
+
+
+def decode_predict_corpus(payload):
+    """-> (uarch, budget_us, list of per-shard packed-block tuples)."""
+    try:
+        off = 0
+        budget_us, off = _unpack_varint(payload, off)
+        n_shards, off = _unpack_varint(payload, off)
+        uarch = None
+        shards = []
+        for _ in range(n_shards):
+            n, off = _unpack_varint(payload, off)
+            ua, _b, blocks = decode_predict_batch(payload[off:off + n])
+            off += n
+            if uarch is None:
+                uarch = ua
+            elif ua != uarch:
+                raise BinaryProtocolError(
+                    f"corpus shards mix uarches ({uarch!r} vs {ua!r})")
+            shards.append(blocks)
+        if uarch is None:
+            raise BinaryProtocolError("empty corpus request")
+        if off != len(payload):
+            raise BinaryProtocolError("trailing bytes after corpus request")
+    except BinaryProtocolError:
+        raise
+    except (IndexError, struct.error) as exc:
+        raise BinaryProtocolError(f"malformed predict_corpus request: "
+                                  f"{exc}") from None
+    return uarch, budget_us, shards
+
+
+def encode_corpus_shard(idx: int, resp_payload: bytes) -> bytes:
+    """Shard response riding a predict_batch_resp payload."""
+    out = bytearray()
+    _pack_varint(out, idx)
+    out.append(0)
+    return bytes(out) + resp_payload
+
+
+def encode_corpus_shard_error(idx: int, env: dict) -> bytes:
+    out = bytearray()
+    _pack_varint(out, idx)
+    out.append(1)
+    return bytes(out) + pack_value(env)
+
+
+def decode_corpus_shard(payload):
+    """-> (shard_idx, envelopes) — a shed/failed shard yields its single
+    error envelope, a served shard the per-block envelopes."""
+    try:
+        idx, off = _unpack_varint(payload, 0)
+        kind = payload[off]
+        off += 1
+        if kind == 0:
+            return idx, decode_predict_batch_resp(payload[off:])
+        if kind == 1:
+            return idx, [unpack_value(payload[off:])]
+        raise BinaryProtocolError(f"unknown corpus shard kind {kind}")
+    except BinaryProtocolError:
+        raise
+    except (IndexError, struct.error) as exc:
+        raise BinaryProtocolError(f"malformed corpus shard response: "
+                                  f"{exc}") from None

@@ -764,6 +764,31 @@ class PredictionService:
 # ---------------------------------------------------------------------------
 
 
+def _corpus_stream(service: "PredictionService", msg: dict):
+    """Per-shard response dicts for a JSON ``predict_corpus`` request:
+    one ``{"shard": i, ...}`` envelope per shard in request order, then a
+    final ``{"done": true}`` summary. Shared by both JSON front ends (the
+    asyncio door adds per-shard admission on top)."""
+    uarch = msg["uarch"]
+    shards = [tuple(protocol.wire_to_packed(b) for b in shard)
+              for shard in msg["shards"]]
+    blocks = errors = 0
+    with obs.span("server.predict_corpus", uarch=uarch, shards=len(shards)):
+        for idx, shard in enumerate(shards):
+            try:
+                envs, _tid = service.serve_wire_batch(uarch, shard)
+                blocks += len(shard)
+                errors += sum(1 for e in envs if not e.get("ok", True))
+                yield {"ok": True, "shard": idx, "result": envs}
+            except Exception as e:  # noqa: BLE001 - structured per shard
+                errors += 1
+                yield {"ok": False, "shard": idx,
+                       "error": protocol.error_to_dict(e)}
+    yield {"ok": True, "done": True,
+           "result": {"shards": len(shards), "blocks": blocks,
+                      "errors": errors, "shed": 0}}
+
+
 class _Handler(socketserver.StreamRequestHandler):
     def handle(self) -> None:
         service: PredictionService = self.server.service  # type: ignore
@@ -774,6 +799,21 @@ class _Handler(socketserver.StreamRequestHandler):
                 break
             if msg is None:
                 break
+            if isinstance(msg, dict) and msg.get("op") == "predict_corpus":
+                # streaming op: one response line per shard + summary
+                try:
+                    for resp in _corpus_stream(service, msg):
+                        protocol.send_msg(self.wfile, resp)
+                except OSError:
+                    break
+                except Exception as e:  # noqa: BLE001 - malformed request
+                    try:
+                        protocol.send_msg(self.wfile, {
+                            "ok": False,
+                            "error": protocol.error_to_dict(e)})
+                    except OSError:
+                        break
+                continue
             try:
                 resp = self._dispatch(service, msg)
             except Exception as e:  # never kill the connection on one op
@@ -1075,6 +1115,9 @@ class PredictionServer:
                                      "error": protocol.error_to_dict(e)}))
                 await writer.drain()
                 continue  # line framing keeps the stream in sync
+            if msg.get("op") == "predict_corpus":
+                await self._corpus_json(msg, writer)
+                continue
             writer.write(await self._route(msg, _jline))
             await writer.drain()
 
@@ -1113,6 +1156,9 @@ class PredictionServer:
                 await writer.drain()
                 return
             payload = await reader.readexactly(length)
+            if kind == protocol.K_PREDICT_CORPUS:
+                await self._corpus_binary(payload, writer)
+                continue
             writer.write(await self._dispatch_binary(kind, payload))
             await writer.drain()
 
@@ -1158,6 +1204,124 @@ class PredictionServer:
         return _bframe({"ok": False, "error": {
             "type": "BinaryProtocolError",
             "message": f"unknown frame kind {kind}"}})
+
+    # -- bulk corpus streaming ---------------------------------------------
+    async def _corpus_json(self, msg: dict, writer) -> None:
+        """Stream a JSON ``predict_corpus``: one response line per shard
+        (each shard individually admission-controlled — a shed shard
+        arrives as an ``Overloaded`` envelope tagged with its index, the
+        stream carries on) and a final ``done`` summary line."""
+        service = self.service
+        try:
+            uarch = msg["uarch"]
+            shards = [tuple(protocol.wire_to_packed(b) for b in shard)
+                      for shard in msg["shards"]]
+        except Exception as e:  # noqa: BLE001 - malformed request
+            writer.write(_jline({"ok": False,
+                                 "error": protocol.error_to_dict(e)}))
+            await writer.drain()
+            return
+        budget_us = msg.get("budget_us")
+        loop = asyncio.get_running_loop()
+        blocks = errors = shed = 0
+        with obs.span("server.predict_corpus", uarch=uarch,
+                      shards=len(shards)):
+            for idx, shard in enumerate(shards):
+                reason = self.admission.try_admit(budget_us)
+                if reason is not None:
+                    shed += 1
+                    env = self.admission.overloaded_env(reason)
+                    env["shard"] = idx
+                    writer.write(_jline(env))
+                    await writer.drain()
+                    continue
+
+                def work(idx=idx, shard=shard):
+                    try:
+                        envs, _tid = service.serve_wire_batch(uarch, shard)
+                    except Exception as e:  # noqa: BLE001 - structured
+                        return 0, 1, _jline(
+                            {"ok": False, "shard": idx,
+                             "error": protocol.error_to_dict(e)})
+                    bad = sum(1 for e in envs if not e.get("ok", True))
+                    return len(shard), bad, _jline(
+                        {"ok": True, "shard": idx, "result": envs})
+
+                t0 = time.perf_counter()
+                try:
+                    n, bad, line = await loop.run_in_executor(
+                        self._pool, work)
+                finally:
+                    self.admission.release(time.perf_counter() - t0)
+                blocks += n
+                errors += bad
+                writer.write(line)
+                await writer.drain()
+        writer.write(_jline({"ok": True, "done": True,
+                             "result": {"shards": len(shards),
+                                        "blocks": blocks, "errors": errors,
+                                        "shed": shed}}))
+        await writer.drain()
+
+    async def _corpus_binary(self, payload: bytes, writer) -> None:
+        """Binary-wire twin of :meth:`_corpus_json`: K_PREDICT_CORPUS in,
+        one K_PREDICT_CORPUS_SHARD frame per shard out (riding the
+        predict_batch response codec), K_PREDICT_CORPUS_END summary
+        last."""
+        service = self.service
+        try:
+            uarch, budget_us, shards = protocol.decode_predict_corpus(
+                payload)
+        except protocol.BinaryProtocolError as e:
+            self.wire_counts["bad_frames"] += 1
+            writer.write(_bframe({"ok": False,
+                                  "error": protocol.error_to_dict(e)}))
+            await writer.drain()
+            return
+        loop = asyncio.get_running_loop()
+        blocks = errors = shed = 0
+        with obs.span("server.predict_corpus", uarch=uarch,
+                      shards=len(shards), wire="binary"):
+            for idx, shard in enumerate(shards):
+                reason = self.admission.try_admit(budget_us)
+                if reason is not None:
+                    shed += 1
+                    env = self.admission.overloaded_env(reason)
+                    writer.write(protocol.frame(
+                        protocol.K_PREDICT_CORPUS_SHARD,
+                        protocol.encode_corpus_shard_error(idx, env)))
+                    await writer.drain()
+                    continue
+
+                def work(idx=idx, shard=shard):
+                    try:
+                        resp, _tid = service.serve_wire_batch(
+                            uarch, shard, binary=True)
+                    except Exception as e:  # noqa: BLE001 - structured
+                        return 0, 1, protocol.frame(
+                            protocol.K_PREDICT_CORPUS_SHARD,
+                            protocol.encode_corpus_shard_error(
+                                idx, {"ok": False,
+                                      "error": protocol.error_to_dict(e)}))
+                    return len(shard), 0, protocol.frame(
+                        protocol.K_PREDICT_CORPUS_SHARD,
+                        protocol.encode_corpus_shard(idx, resp))
+
+                t0 = time.perf_counter()
+                try:
+                    n, bad, fr = await loop.run_in_executor(
+                        self._pool, work)
+                finally:
+                    self.admission.release(time.perf_counter() - t0)
+                blocks += n
+                errors += bad
+                writer.write(fr)
+                await writer.drain()
+        writer.write(protocol.frame(
+            protocol.K_PREDICT_CORPUS_END,
+            protocol.pack_value({"shards": len(shards), "blocks": blocks,
+                                 "errors": errors, "shed": shed})))
+        await writer.drain()
 
     # -- request routing ---------------------------------------------------
     async def _route(self, msg: dict, enc) -> bytes:

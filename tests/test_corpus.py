@@ -1,0 +1,197 @@
+"""Corpus subsystem tests: seeded generation determinism, scoring math,
+mega-wave evaluation, per-shard resume, and served-vs-in-process
+byte-identity of the accuracy artifact on both wires."""
+import json
+
+import pytest
+
+from repro.core import model_io
+from repro.core.characterize import characterize
+from repro.core.isa import TEST_ISA
+from repro.corpus import (CorpusSpec, FAMILIES, client_predict_fn,
+                          error_buckets, evaluate_corpus, format_report,
+                          generate_blocks, generate_corpus, kendall_tau,
+                          load_manifest, mape, score_results)
+from repro.corpus.store import read_shard
+from repro.service.client import local_service
+from repro.service.protocol import parse_block
+
+SPEC = CorpusSpec(seed=7, blocks_per_uarch=48, uarches=("sim_skl",),
+                  shard_size=16, min_len=2, max_len=8)
+
+
+@pytest.fixture(scope="module")
+def corpus_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("corpus")
+    generate_corpus(out, SPEC)
+    return out
+
+
+@pytest.fixture(scope="module")
+def corpus_model(corpus_dir):
+    """A model characterized over exactly the variants the corpus uses,
+    round-tripped through XML so the in-process and served paths load the
+    same artifact bits."""
+    man = load_manifest(corpus_dir)
+    used = sorted({ins.spec for s in man["shards"]
+                   for r in read_shard(corpus_dir, s)
+                   for ins in parse_block(r["block"])})
+    from repro.core.simulator import SimMachine
+    from repro.core.uarch import SIM_SKL
+
+    model = characterize(SimMachine(SIM_SKL, TEST_ISA), TEST_ISA, used)
+    return model_io.load_xml(model_io.to_xml(model, TEST_ISA))
+
+
+# -- generation --------------------------------------------------------------
+
+def test_generation_deterministic_and_stratified(tmp_path):
+    a = generate_corpus(tmp_path / "a", SPEC)
+    b = generate_corpus(tmp_path / "b", SPEC)
+    assert a["corpus_id"] == b["corpus_id"]
+    assert (tmp_path / "a" / "manifest.json").read_bytes() == \
+        (tmp_path / "b" / "manifest.json").read_bytes()
+    for sh in a["shards"]:
+        assert (tmp_path / "a" / "shards" / sh["name"]).read_bytes() == \
+            (tmp_path / "b" / "shards" / sh["name"]).read_bytes()
+    # stratified: every family appears, counts sum to the spec
+    fam_counts: dict = {}
+    for sh in a["shards"]:
+        for fam, n in sh["families"].items():
+            fam_counts[fam] = fam_counts.get(fam, 0) + n
+    assert set(fam_counts) == set(FAMILIES)
+    assert sum(fam_counts.values()) == SPEC.blocks_per_uarch
+
+
+def test_different_seed_different_corpus(tmp_path):
+    import dataclasses
+    a = generate_corpus(tmp_path / "a", SPEC)
+    b = generate_corpus(tmp_path / "b", dataclasses.replace(SPEC, seed=8))
+    assert a["corpus_id"] != b["corpus_id"]
+
+
+def test_generated_blocks_parse_and_respect_lengths():
+    for rec in generate_blocks("sim_skl", SPEC):
+        code = parse_block(rec["block"])
+        assert SPEC.min_len <= len(code) <= SPEC.max_len
+        assert rec["family"] in FAMILIES
+
+
+# -- scoring math ------------------------------------------------------------
+
+def test_mape_hand_computed():
+    # |10-8|/8 = 0.25, |5-5|/5 = 0, |3-4|/4 = 0.25 -> mean 1/6
+    assert mape([10, 5, 3], [8, 5, 4]) == pytest.approx(1 / 6)
+    assert mape([1, 2], [0, 2]) == 0.0  # zero-measured entries skipped
+
+
+def test_kendall_tau_hand_computed():
+    assert kendall_tau([1, 2, 3], [1, 2, 3]) == pytest.approx(1.0)
+    assert kendall_tau([1, 2, 3], [3, 2, 1]) == pytest.approx(-1.0)
+    # one discordant pair of three: tau = (2 - 1) / 3
+    assert kendall_tau([1, 2, 3], [1, 3, 2]) == pytest.approx(1 / 3)
+    # tie-aware (tau-b): x=[1,1,2], y=[1,2,2] -> pairs (0,1) and (1,2) are
+    # ties, (0,2) concordant: nc=1, nd=0, n1=n2=1,
+    # tau = 1 / sqrt((3-1)*(3-1)) = 0.5
+    assert kendall_tau([1, 1, 2], [1, 2, 2]) == pytest.approx(0.5)
+    # chunking must not change the result
+    import random
+    rng = random.Random(0)
+    x = [rng.random() for _ in range(300)]
+    y = [rng.random() for _ in range(300)]
+    assert kendall_tau(x, y, chunk=7) == pytest.approx(
+        kendall_tau(x, y, chunk=300))
+
+
+def test_error_buckets_hand_computed():
+    pred = [100, 103, 108, 120, 200]
+    true = [100, 100, 100, 100, 100]  # rel err 0, .03, .08, .20, 1.0
+    assert error_buckets(pred, true) == {
+        "<1%": 1, "1-5%": 1, "5-10%": 1, "10-25%": 1, ">25%": 1}
+
+
+# -- evaluation --------------------------------------------------------------
+
+def test_evaluate_perfect_predictor_scores_zero(corpus_dir, corpus_model,
+                                                tmp_path):
+    """predictor == simulator -> MAPE 0, tau 1 (the e2e identity)."""
+    results = evaluate_corpus(
+        corpus_dir, models={"sim_skl": corpus_model},
+        out_dir=tmp_path / "r", wave_width=32,
+        predict_fn=lambda ua, blocks: _simulate(corpus_dir, blocks))
+    rep = score_results(results)
+    sc = rep["uarches"]["sim_skl"]
+    assert sc["n"] == SPEC.blocks_per_uarch
+    assert sc["mape"] == 0.0
+    assert sc["kendall_tau"] == pytest.approx(1.0)
+    assert sc["buckets"]["<1%"] == SPEC.blocks_per_uarch
+    # fused mega-waves actually formed
+    assert rep["wave_stats"]["max_wave_width"] >= 32
+    assert "corpus" in format_report(rep)
+
+
+def _simulate(corpus_dir, blocks):
+    from repro.core.engine import as_engine, Experiment
+    from repro.core.simulator import SimMachine
+    from repro.core.uarch import SIM_SKL
+
+    eng = as_engine(SimMachine(SIM_SKL, TEST_ISA))
+    return [c.cycles for c in eng.submit([Experiment.of(b) for b in blocks])]
+
+
+def test_evaluate_resume_skips_done_shards(corpus_dir, corpus_model,
+                                           tmp_path):
+    out = tmp_path / "r"
+    a = evaluate_corpus(corpus_dir, models={"sim_skl": corpus_model},
+                        out_dir=out, wave_width=32)
+    b = evaluate_corpus(corpus_dir, models={"sim_skl": corpus_model},
+                        out_dir=out, wave_width=32)
+    assert b["wave_stats"]["waves"] == 0  # all shards resumed
+    assert a["uarches"] == b["uarches"]
+    ja = json.dumps(score_results(a)["uarches"], sort_keys=True)
+    jb = json.dumps(score_results(b)["uarches"], sort_keys=True)
+    assert ja == jb
+
+
+# -- served path -------------------------------------------------------------
+
+@pytest.mark.parametrize("wire", ["json", "binary"])
+def test_served_scores_byte_identical(corpus_dir, corpus_model, tmp_path,
+                                      wire):
+    """The bulk predict_corpus endpoint returns byte-identical scores to
+    the in-process path, on both wire protocols."""
+    ref = evaluate_corpus(corpus_dir, models={"sim_skl": corpus_model},
+                          out_dir=tmp_path / "ref", wave_width=32)
+    ref_json = json.dumps(score_results(ref), sort_keys=True)
+
+    models_dir = tmp_path / "models"
+    models_dir.mkdir()
+    (models_dir / "sim_skl.xml").write_text(
+        model_io.to_xml(corpus_model, TEST_ISA))
+    with local_service(models_dir, wire=wire) as client:
+        assert client.wire == wire
+        got = evaluate_corpus(
+            corpus_dir, models={"sim_skl": corpus_model},
+            out_dir=tmp_path / f"served_{wire}", wave_width=32,
+            predict_fn=client_predict_fn(client, shard_size=16))
+    assert json.dumps(score_results(got), sort_keys=True) == ref_json
+
+
+def test_predict_corpus_summary_and_order(corpus_dir, corpus_model,
+                                          tmp_path):
+    models_dir = tmp_path / "models"
+    models_dir.mkdir()
+    (models_dir / "sim_skl.xml").write_text(
+        model_io.to_xml(corpus_model, TEST_ISA))
+    man = load_manifest(corpus_dir)
+    shards = [[r["block"] for r in read_shard(corpus_dir, s)]
+              for s in man["shards"]]
+    with local_service(models_dir) as client:
+        per_shard, summary = client.predict_corpus("sim_skl", shards)
+    assert summary["shards"] == len(shards)
+    assert summary["blocks"] == sum(len(s) for s in shards)
+    assert summary["errors"] == 0 and summary["shed"] == 0
+    assert len(per_shard) == len(shards)
+    for envs, shard in zip(per_shard, shards):
+        assert len(envs) == len(shard)
+        assert all(e["ok"] for e in envs)
