@@ -685,6 +685,89 @@ def bench_trace_overhead(smoke: bool = False):
         "bound_ok": bound < 0.02})
 
 
+FAULT_OVERHEAD_STATS: dict = {}
+
+
+def bench_fault_overhead(smoke: bool = False):
+    """Chaos tax: the numpy wave sweep with no fault plan installed vs an
+    *armed-but-never-firing* plan (p=0 rules at every injection point).
+    Same discipline as ``bench_trace_overhead``: the asserted <2% gate is
+    the **analytic disabled-path bound** — injection checks per pass × the
+    measured cost of one disabled ``faults.check`` call, as a share of the
+    plan-free wall time — because the A/B ratio is noise-dominated on a
+    busy host."""
+    import random
+    import time as _time
+
+    from repro.core.batch_sim import BatchSimMachine
+    from repro.core.isa import TEST_ISA
+    from repro.core.machine import RegPool, independent_seq
+    from repro.core.uarch import SIM_SKL
+    from repro.faults import plan as faults
+    from repro.faults.plan import POINTS, FaultPlan
+
+    specs = ["ADD_R64_R64", "IMUL_R64_R64", "MOV_R64_R64",
+             "SHLD_R64_R64_I8", "PADDD_X_X", "MOV_R64_M64", "ADC_R64_R64",
+             "MULPS_X_X", "DIV_R64", "AESDEC_X_X"]
+    wave = 32 if smoke else 128
+    rng = random.Random(wave)   # same wave construction as backend matrix
+    codes = []
+    for _ in range(wave):
+        body = independent_seq(TEST_ISA[rng.choice(specs)], RegPool(),
+                               rng.randint(4, 12))
+        codes.append(body * 10)
+        codes.append(body * 110)
+    m = BatchSimMachine(SIM_SKL, TEST_ISA, backend="numpy")
+    m.run_batch(codes)          # absorb compiles + cold lowering
+
+    reps = 3 if smoke else 5
+    prev = faults.set_plan(None)
+    try:
+        t_off = min(_timed(lambda: m.run_batch(codes))[1]
+                    for _ in range(reps)) / 1e6
+        armed = FaultPlan.from_spec(
+            ";".join(f"{p}:raise:p=0" for p in POINTS))
+        faults.set_plan(armed)
+        t_on = min(_timed(lambda: m.run_batch(codes))[1]
+                   for _ in range(reps)) / 1e6
+        checks_per_pass = armed.occurrences() / reps
+        assert not armed.fired
+
+        # cost of one disabled check, measured on the real fast path
+        faults.set_plan(None)
+        n = 100_000
+        t0 = _time.perf_counter_ns()
+        for _ in range(n):
+            faults.check("wave.kernel", key="bench")
+        noop_ns = (_time.perf_counter_ns() - t0) / n
+    finally:
+        faults.set_plan(prev)
+
+    ratio = t_on / t_off
+    bound = checks_per_pass * noop_ns / (t_off * 1e9)
+    print("\n== fault-injection overhead: numpy wave sweep, plan off vs "
+          "armed p=0 ==")
+    print(f"{'wave':>6s} {'off_s':>8s} {'on_s':>8s} {'on/off':>7s} "
+          f"{'checks':>7s} {'noop_ns':>8s} {'bound%':>7s}")
+    print(f"{wave:6d} {t_off:8.4f} {t_on:8.4f} {ratio:6.3f}x "
+          f"{checks_per_pass:7.0f} {noop_ns:8.1f} {100 * bound:6.4f}%")
+    assert bound < 0.02, \
+        f"disabled-injection overhead bound {100 * bound:.3f}% >= 2% " \
+        f"({checks_per_pass:.0f} checks/pass x {noop_ns:.0f}ns noop over " \
+        f"{t_off:.4f}s)"
+    emit("fault_overhead_off", t_off * 1e6 / (2 * wave),
+         f"bound={100 * bound:.4f}%")
+    emit("fault_overhead_armed", t_on * 1e6 / (2 * wave),
+         f"armed/off={ratio:.3f}x")
+    FAULT_OVERHEAD_STATS.update({
+        "wave": wave, "t_off_s": round(t_off, 4), "t_on_s": round(t_on, 4),
+        "armed_over_disabled": round(ratio, 4),
+        "checks_per_pass": checks_per_pass,
+        "disabled_check_ns": round(noop_ns, 1),
+        "disabled_overhead_bound_pct": round(100 * bound, 4),
+        "bound_ok": bound < 0.02})
+
+
 DEVICE_SCALING_STATS: dict = {}
 
 # worker for bench_device_scaling: runs in a subprocess because
@@ -1515,6 +1598,7 @@ BENCHES = {
     "bench_batch_sim": bench_batch_sim,
     "bench_backend_matrix": bench_backend_matrix,
     "bench_trace_overhead": bench_trace_overhead,
+    "bench_fault_overhead": bench_fault_overhead,
     "bench_device_scaling": bench_device_scaling,
     "bench_characterize": bench_characterize,
     "bench_wave_fusion": bench_wave_fusion,
@@ -1548,9 +1632,9 @@ def main(argv=None) -> None:
     for name in selected:
         fn = BENCHES[name]
         if name in ("bench_batch_sim", "bench_backend_matrix",
-                    "bench_trace_overhead", "bench_device_scaling",
-                    "bench_characterize", "bench_service_saturation",
-                    "bench_corpus_eval"):
+                    "bench_trace_overhead", "bench_fault_overhead",
+                    "bench_device_scaling", "bench_characterize",
+                    "bench_service_saturation", "bench_corpus_eval"):
             fn(smoke=args.smoke)
         else:
             fn()
@@ -1567,6 +1651,7 @@ def main(argv=None) -> None:
         "batch_sim": BATCH_SIM_STATS,
         "backend_matrix": BACKEND_MATRIX_STATS,
         "trace_overhead": TRACE_OVERHEAD_STATS,
+        "fault_overhead": FAULT_OVERHEAD_STATS,
         "device_scaling": DEVICE_SCALING_STATS,
         "characterize": CHARACTERIZE_STATS,
         "wave_fusion": WAVE_FUSION_STATS,

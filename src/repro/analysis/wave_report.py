@@ -61,11 +61,14 @@ def _is_device_track(ev: dict) -> bool:
 def wave_report(events: List[dict], top: int = 5) -> dict:
     """Aggregate a normalized event list (see
     :func:`repro.obs.export.load_events`) into the attribution report."""
+    from repro.faults.tolerance import StragglerDetector  # noqa: PLC0415
+
     stages: Dict[str, dict] = {s: {"us": 0.0, "count": 0}
                                for s in dict.fromkeys(STAGE_OF.values())}
     lock_us = 0.0
     lock_count = 0
     devices: Dict[str, float] = {}
+    straggler = StragglerDetector()
     waves: List[dict] = []
     run_batches = 0
     t_lo, t_hi = None, 0.0
@@ -84,6 +87,8 @@ def wave_report(events: List[dict], top: int = 5) -> dict:
             if name == "wave.kernel":
                 stages["kernel"]["us"] += dur
                 stages["kernel"]["count"] += 1
+                # the same per-device EWMA the device executor runs live
+                straggler.observe(ev["tid_name"], dur / 1e6)
             continue
         if name in LOCK_SPANS:
             lock_us += dur
@@ -118,6 +123,7 @@ def wave_report(events: List[dict], top: int = 5) -> dict:
                       "share": lock_share},
         "devices": devices,
         "device_imbalance": imbalance,
+        "stragglers": straggler.snapshot(),
         "waves": run_batches,
         "top_waves": waves[:top],
         "bottleneck": bottleneck,
@@ -163,6 +169,14 @@ def format_wave_report(rep: dict) -> str:
                      f"{rep['device_imbalance']:.2f}x max/mean):")
         for dev, us in sorted(rep["devices"].items()):
             lines.append(f"  {dev:<12} {us / 1e3:>10.2f} ms")
+        flagged = (rep.get("stragglers") or {}).get("flagged") or []
+        if flagged:
+            st = rep["stragglers"]
+            lines.append(f"stragglers (EWMA > {2.0:.1f}x fleet median "
+                         f"{st['median_s'] * 1e3:.2f} ms):")
+            for dev in flagged:
+                lines.append(f"  {dev:<12} "
+                             f"{st['ewma_s'][dev] * 1e3:>10.2f} ms EWMA")
     if rep["top_waves"]:
         lines.append("")
         lines.append(f"slowest waves (top {len(rep['top_waves'])}):")

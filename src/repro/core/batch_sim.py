@@ -58,6 +58,7 @@ instead of per-μop Python work.
 from __future__ import annotations
 
 import threading
+import warnings
 
 import numpy as np
 
@@ -67,6 +68,8 @@ from repro.core.uarch import UArch
 from repro.core.uarch_compile import (F_HAS_SR, F_PRESENT, TEMP_BASE,
                                       CompiledUArch, UopTableIndex,
                                       compile_uarch)
+from repro.faults import plan as faults
+from repro.faults.tolerance import StragglerDetector
 from repro.obs import tracer as obs
 
 # producer descriptor kinds (recipe-time)
@@ -93,6 +96,14 @@ DEFAULT_LOWER_CACHE = 4096
 
 # lane-block width for the pallas kernel grid (the TPU lane dimension)
 _PALLAS_LANE_BLOCK = 128
+
+
+def _fault_key(code) -> str:
+    """Content key for ``wave.kernel`` fault rules: the sequence's spec
+    string, so a seeded fault follows its poisoned sequence through every
+    bisection sub-wave and every backend, and ``match=`` clauses can
+    target instructions by name (see :mod:`repro.faults.plan`)."""
+    return ";".join(ins.spec for ins in code)
 
 
 class _Plan:
@@ -270,7 +281,14 @@ class BatchSimMachine:
         self._lower_cache: dict = {}
         self._lower_max = lower_cache_entries
         self.lowering_stats = {"hits": 0, "misses": 0, "evictions": 0}
+        # backend degradation counters: "<from>-><to>" -> chunks rerouted
+        # down the backend chain (pallas -> jax -> numpy -> scalar oracle)
+        # after a kernel-path failure.  Results stay bit-identical (every
+        # backend computes the same integers); the engine snapshots these
+        # through degraded_stats() into EngineStats.degraded_chunks.
+        self.degraded: dict = {}
         self._device = None             # lazy _DeviceExec (jax/pallas)
+        self._device_fb: dict = {}      # degraded-backend executors
         # guards the machine's shared mutable host state (lowering-cache
         # LRU, recipe memo, lazy device/scalar init) across concurrent
         # run_batch callers; slot leasing has its own lock in _DeviceExec
@@ -289,6 +307,7 @@ class BatchSimMachine:
         with self._host_lock:
             self.devices = devices
             self._device = None
+            self._device_fb.clear()
 
     def device_stats(self) -> dict:
         """Device-kernel telemetry: compile count (the CI recompile probe
@@ -300,6 +319,23 @@ class BatchSimMachine:
         if self._device is None:
             return {}
         return self._device.stats()
+
+    def degraded_stats(self) -> dict:
+        """Per-transition backend degradation counters
+        (``{"jax->numpy": 2, ...}``) — empty when no chunk has ever been
+        rerouted, which is the overwhelmingly common case."""
+        with self._host_lock:
+            return dict(self.degraded)
+
+    def _note_degraded(self, frm: str, to: str, chunks: int,
+                       exc: BaseException) -> None:
+        key = f"{frm}->{to}"
+        with self._host_lock:
+            self.degraded[key] = self.degraded.get(key, 0) + chunks
+        obs.instant("wave.degraded", transition=key, chunks=chunks,
+                    error=f"{type(exc).__name__}: {exc}")
+        warnings.warn(f"{self.name}: {chunks} chunk(s) degraded {key} "
+                      f"after {type(exc).__name__}: {exc}", stacklevel=2)
 
     def run_batch(self, codes, kernel_lock=None) -> list:
         """Execute each sequence once; one :class:`Counters` per sequence,
@@ -353,35 +389,105 @@ class BatchSimMachine:
         batched = [c for c in chunks if len(c) >= self.min_lanes]
         thin = [i for c in chunks if len(c) < self.min_lanes for i in c]
         if thin:
-            with self._host_lock:
-                if self._scalar is None:
-                    from repro.core.simulator import (  # noqa: PLC0415
-                        SimMachine)
-                    self._scalar = SimMachine(self.uarch, self.isa)
-            # wait_lock(None) degrades to a no-op, so both lock topologies
-            # share one code path; acquisition wait is traced separately
-            with obs.span("wave.scalar", thin=len(thin)), \
-                    obs.wait_lock(kernel_lock, "wave.lock_wait"):
-                for i in thin:
-                    out[i] = self._scalar.run(codes[i])
+            self._chunk_scalar(thin, codes, out, kernel_lock)
         if not batched:
             return out
         progs = self._lower_wave(codes, batched)
         if self.backend == "numpy":
             for c in batched:
-                with obs.span("wave.pack", lanes=len(c)):
-                    pk = self._pack_chunk(c, progs)
-                if pk.S == 0:
-                    self._fill_empty(c, out)
-                    continue
-                with obs.wait_lock(kernel_lock, "wave.lock_wait"), \
-                        obs.span("wave.kernel", lanes=pk.E, steps=pk.S):
-                    done, counts = self._kernel_numpy(pk)
-                with obs.span("wave.extract", lanes=len(c)):
-                    self._extract(pk, done.T, counts, out)
+                try:
+                    self._chunk_numpy(c, codes, progs, out, kernel_lock)
+                except Exception as exc:
+                    self._note_degraded("numpy", "scalar", 1, exc)
+                    self._chunk_scalar(c, codes, out, kernel_lock,
+                                       span="wave.degraded")
         else:
-            self._run_device(batched, progs, out, kernel_lock)
+            try:
+                self._run_device(batched, codes, progs, out, kernel_lock,
+                                 self.backend)
+            except Exception as exc:
+                self._degrade_device(batched, codes, progs, out,
+                                     kernel_lock, exc)
         return out
+
+    def _ensure_scalar(self):
+        with self._host_lock:
+            if self._scalar is None:
+                from repro.core.simulator import SimMachine  # noqa: PLC0415
+                self._scalar = SimMachine(self.uarch, self.isa)
+            return self._scalar
+
+    def _chunk_scalar(self, idxs, codes, out, kernel_lock,
+                      span: str = "wave.scalar") -> None:
+        """Run ``idxs`` on the scalar oracle — the thin-chunk path, and
+        the terminal rung of the backend degradation chain."""
+        sim = self._ensure_scalar()
+        # wait_lock(None) degrades to a no-op, so both lock topologies
+        # share one code path; acquisition wait is traced separately
+        with obs.span(span, thin=len(idxs)), \
+                obs.wait_lock(kernel_lock, "wave.lock_wait"):
+            if faults.active():
+                faults.check_wave("wave.kernel",
+                                  [_fault_key(codes[i]) for i in idxs],
+                                  backend="scalar")
+            for i in idxs:
+                out[i] = sim.run(codes[i])
+
+    def _chunk_numpy(self, c, codes, progs, out, kernel_lock) -> None:
+        """Pack + host-kernel + extract for one chunk (the numpy backend's
+        per-chunk unit of work, also the numpy rung of the degradation
+        chain for device-backend failures)."""
+        with obs.span("wave.pack", lanes=len(c)):
+            if faults.active():
+                faults.check("wave.pack", backend="numpy")
+            pk = self._pack_chunk(c, progs)
+        if pk.S == 0:
+            self._fill_empty(c, out)
+            return
+        with obs.wait_lock(kernel_lock, "wave.lock_wait"), \
+                obs.span("wave.kernel", lanes=pk.E, steps=pk.S):
+            if faults.active():
+                faults.check_wave("wave.kernel",
+                                  [_fault_key(codes[i]) for i in c],
+                                  backend="numpy")
+            done, counts = self._kernel_numpy(pk)
+        with obs.span("wave.extract", lanes=len(c)):
+            self._extract(pk, done.T, counts, out)
+
+    def _degrade_device(self, batched, codes, progs, out, kernel_lock,
+                        exc: BaseException) -> None:
+        """Backend degradation chain: on a device-path failure, re-run
+        every chunk that never produced results on the next backend down
+        (pallas -> jax -> numpy -> scalar oracle).  Results stay
+        bit-identical — each backend computes the same integers — so a
+        degraded wave is correct, just slower; reroutes are counted per
+        transition (``degraded_stats()``).  A wave that fails even the
+        scalar oracle re-raises, handing the measurement engine's
+        bisecting retry the job of isolating the poison experiment."""
+        prev = self.backend
+        for nxt in (("jax",) if self.backend == "pallas" else ()):
+            remaining = [c for c in batched
+                         if any(out[i] is None for i in c)]
+            if not remaining:
+                return
+            self._note_degraded(prev, nxt, len(remaining), exc)
+            try:
+                self._run_device(remaining, codes, progs, out,
+                                 kernel_lock, nxt)
+                return
+            except Exception as e2:
+                exc, prev = e2, nxt
+        remaining = [c for c in batched if any(out[i] is None for i in c)]
+        if not remaining:
+            return
+        self._note_degraded(prev, "numpy", len(remaining), exc)
+        for c in remaining:
+            try:
+                self._chunk_numpy(c, codes, progs, out, kernel_lock)
+            except Exception as e3:
+                self._note_degraded("numpy", "scalar", 1, e3)
+                self._chunk_scalar(c, codes, out, kernel_lock,
+                                   span="wave.degraded")
 
     # ------------------------------------------------------------------
     # lowering cache: content-addressed _Prog tensors
@@ -933,7 +1039,30 @@ class BatchSimMachine:
         return done, (pc_key >> idx_bits).astype(np.int32)
 
     # -- device backends (jax scan / pallas) ---------------------------
-    def _run_device(self, batched, progs, out, kernel_lock) -> None:
+    def _device_exec(self, kind: str):
+        """Lazy per-backend device executor.  The machine's configured
+        backend keeps the historical ``_device`` slot (``set_devices``
+        drops it for rebuild); degraded-backend executors are cached
+        separately and share the same resolved device placement."""
+        from repro.core.device_mesh import resolve_devices  # noqa: PLC0415
+        with self._host_lock:
+            if kind == self.backend:
+                if self._device is None:
+                    self._device = _DeviceExec(
+                        self._comp, kind,
+                        devices=resolve_devices(self.devices),
+                        min_lanes=self.min_lanes)
+                return self._device
+            dev = self._device_fb.get(kind)
+            if dev is None:
+                dev = self._device_fb[kind] = _DeviceExec(
+                    self._comp, kind,
+                    devices=resolve_devices(self.devices),
+                    min_lanes=self.min_lanes)
+            return dev
+
+    def _run_device(self, batched, codes, progs, out, kernel_lock,
+                    kind: str) -> None:
         """Pipelined, lane-sharded device execution: each chunk is split
         into per-core lane shards whose kernels run concurrently on the
         device pool (the kernels release the GIL), and chunk k+1 is packed
@@ -945,15 +1074,7 @@ class BatchSimMachine:
         ``kernel_lock`` is held only around kernel dispatch, never around
         host packing or result waits."""
         from collections import deque  # noqa: PLC0415
-        with self._host_lock:
-            if self._device is None:
-                from repro.core.device_mesh import (  # noqa: PLC0415
-                    resolve_devices)
-                self._device = _DeviceExec(
-                    self._comp, self.backend,
-                    devices=resolve_devices(self.devices),
-                    min_lanes=self.min_lanes)
-        dev = self._device
+        dev = self._device_exec(kind)
         pending: deque = deque()
         jobs: list = []
         try:
@@ -961,8 +1082,14 @@ class BatchSimMachine:
                 if max(progs[i].n_rows for i in c) == 0:
                     self._fill_empty(c, out)
                     continue
+                if faults.active():
+                    faults.check_wave("wave.kernel",
+                                      [_fault_key(codes[i]) for i in c],
+                                      backend=kind)
                 jobs = []
                 with obs.span("wave.pack", lanes=len(c)) as psp:
+                    if faults.active():
+                        faults.check("wave.pack", backend=kind)
                     for sc in dev.shard(c, progs):
                         S0 = max(progs[i].n_rows for i in sc)
                         if S0 == 0:    # a shard of all-zero-μop programs
@@ -1078,19 +1205,39 @@ class _DeviceExec:
         self._pool = None
         self._lock = threading.Lock()   # guards slot leasing / ring LRU
         self._rings: dict = {}   # bucket -> slot list (LRU by bucket)
+        # per-device kernel wall time + straggler EWMA, fed by the traced
+        # kernel path (the observe hook on _run_kernel); flagged outliers
+        # surface through stats() and the analyze.py wave report
+        self.kernel_ns: dict = {}      # "device:<id>" -> total kernel ns
+        self.straggler = StragglerDetector()
+
+    def _observe(self, tracks, dur_ns: int) -> None:
+        """Traced-kernel callback (runs on a pool thread): accumulate
+        per-device kernel time and feed the straggler EWMA with each
+        device's share of the shard interval."""
+        with self._lock:
+            for label, _ in tracks:
+                self.kernel_ns[label] = self.kernel_ns.get(label, 0) \
+                    + dur_ns
+                self.straggler.observe(label, dur_ns / 1e9)
 
     def stats(self) -> dict:
-        return {"backend": self.kind, "compiles": self.compiles,
-                "kernel_calls": self.kernel_calls,
-                "buckets": sorted(self.buckets),
-                "mesh": self.mesh_mode,
-                "devices": [d.id for d in self.devices],
-                "per_device": {
-                    did: {"compiles": c["compiles"],
-                          "kernel_calls": c["kernel_calls"],
-                          "lanes": c["lanes"],
-                          "buckets": sorted(c["buckets"])}
-                    for did, c in self.per_device.items()}}
+        out = {"backend": self.kind, "compiles": self.compiles,
+               "kernel_calls": self.kernel_calls,
+               "buckets": sorted(self.buckets),
+               "mesh": self.mesh_mode,
+               "devices": [d.id for d in self.devices],
+               "per_device": {
+                   did: {"compiles": c["compiles"],
+                         "kernel_calls": c["kernel_calls"],
+                         "lanes": c["lanes"],
+                         "buckets": sorted(c["buckets"])}
+                   for did, c in self.per_device.items()}}
+        with self._lock:
+            if self.kernel_ns:   # only traced waves populate these
+                out["kernel_ns"] = dict(sorted(self.kernel_ns.items()))
+                out["stragglers"] = self.straggler.snapshot()
+        return out
 
     # -- lane sharding --------------------------------------------------
     def shard(self, chunk, progs) -> list:
@@ -1223,6 +1370,8 @@ class _DeviceExec:
         execution parallelism is the pool's and the devices' (compiled
         kernels release the GIL), and machines placed on disjoint device
         subsets must never serialize each other's kernels."""
+        if faults.active():
+            faults.check("device.dispatch", backend=self.kind)
         pool = self._get_pool()
         M, P = self.comp.mask_table.shape
         traced = obs.enabled()
@@ -1265,7 +1414,8 @@ class _DeviceExec:
             # untraced waves keep the legacy 2-arg call (tests monkeypatch
             # _run_kernel with that signature to inject kernel failures)
             if traced:
-                futs = [pool.submit(_run_kernel, fn, args, tracks)
+                futs = [pool.submit(_run_kernel, fn, args, tracks,
+                                    self._observe)
                         for fn, args, tracks in calls]
             else:
                 futs = [pool.submit(_run_kernel, fn, args)
@@ -1309,7 +1459,7 @@ def _abort_jobs(jobs, futs) -> None:
         slot.release()
 
 
-def _run_kernel(fn, args, tracks=()):
+def _run_kernel(fn, args, tracks=(), observe=None):
     """Pool worker: execute one compiled shard kernel and realize its
     outputs on the host (so finalization only touches host arrays; the
     packing buffers themselves stay leased until extraction).
@@ -1317,7 +1467,8 @@ def _run_kernel(fn, args, tracks=()):
     ``tracks`` — when tracing is on — attributes the kernel interval to
     every participating device's ``device:<id>`` trace track with that
     device's real lane share (how per-device timelines and imbalance
-    appear in the wave report)."""
+    appear in the wave report); ``observe`` additionally feeds the
+    executor's per-device kernel-time counters and straggler EWMA."""
     if not tracks:
         done, counts = fn(*args)
         return np.asarray(done), np.asarray(counts)
@@ -1328,6 +1479,8 @@ def _run_kernel(fn, args, tracks=()):
     dur = time.perf_counter_ns() - t0
     for label, lanes in tracks:
         obs.emit_span("wave.kernel", t0, dur, track=label, lanes=lanes)
+    if observe is not None:
+        observe(tracks, dur)
     return out
 
 

@@ -51,10 +51,13 @@ from __future__ import annotations
 import hashlib
 import threading
 import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor, as_completed
 from dataclasses import dataclass, field
 
 from repro.core.simulator import Counters, Instr
+from repro.faults import plan as faults
+from repro.faults.plan import InjectedFault
 from repro.obs import tracer as obs
 
 # Algorithm 2 protocol defaults: the two unroll counts whose difference
@@ -138,6 +141,34 @@ class Experiment:
 
 
 @dataclass
+class QuarantinedExperiment:
+    """One experiment isolated by bisecting retry: its wave failed, the
+    engine split until the failure pinned to this experiment alone, and
+    the campaign carried on without it. The record is the postmortem
+    handle — the cache key replays the exact microbenchmark, ``error``
+    names the terminal exception (for injected faults that includes the
+    fault point + occurrence, which replays the chaos schedule)."""
+    uarch: str
+    cache_key: str
+    code: str    # canonical body (truncated for reporting)
+    error: str   # "ExcType: message"
+
+    def as_dict(self) -> dict:
+        return {"uarch": self.uarch, "cache_key": self.cache_key,
+                "code": self.code, "error": self.error}
+
+
+class QuarantinedResult(Counters):
+    """Sentinel Counters returned for a quarantined experiment: NaN
+    cycles, no port uops. Never persisted to the engine cache — a later
+    submit of the same experiment re-executes it."""
+
+
+def is_quarantined(c: Counters) -> bool:
+    return isinstance(c, QuarantinedResult)
+
+
+@dataclass
 class EngineStats:
     requests: int = 0      # Experiments submitted
     cache_hits: int = 0    # served from a previously executed result
@@ -155,6 +186,18 @@ class EngineStats:
     lowering_hits: int = 0
     lowering_misses: int = 0
     lowering_evictions: int = 0
+    # resilience counters: experiments isolated + dropped by bisecting
+    # retry, sub-wave retry rounds spent isolating them, and chunks the
+    # machine degraded to a lower backend after a kernel fault (snapshot
+    # of the backend's per-transition counters in ``degraded``)
+    quarantined: int = 0
+    bisect_retries: int = 0
+    degraded_chunks: int = 0
+    # the typed records behind ``quarantined`` (QuarantinedExperiment);
+    # non-numeric, surfaced via ``as_dict()["quarantine"]`` only when
+    # non-empty so clean runs keep the legacy shape byte-identical
+    quarantine: list = field(default_factory=list)
+    degraded: dict = field(default_factory=dict)
     # machine-side device-kernel telemetry: the batched backend's
     # ``device_stats()`` snapshot (compile/kernel-call totals plus the
     # ``per_device`` counters, keyed by jax device id), refreshed after
@@ -184,6 +227,9 @@ class EngineStats:
         reg.gauge("engine.lowering.hits").set(self.lowering_hits)
         reg.gauge("engine.lowering.misses").set(self.lowering_misses)
         reg.gauge("engine.lowering.evictions").set(self.lowering_evictions)
+        reg.gauge("engine.quarantined").set(self.quarantined)
+        reg.gauge("engine.bisect_retries").set(self.bisect_retries)
+        reg.gauge("engine.degraded_chunks").set(self.degraded_chunks)
         reg.gauge("engine.cache.hit_rate").set(round(self.hit_rate, 4))
         if self.device:
             obs_metrics.absorb_device_stats(reg, self.device)
@@ -197,6 +243,12 @@ class EngineStats:
         from repro.obs import metrics as obs_metrics  # noqa: PLC0415
         out = obs_metrics.legacy_engine_dict(self.to_registry())
         out["device"] = dict(self.device)
+        # resilience details only when something actually happened, so
+        # clean runs keep the historical shape exactly
+        if self.quarantine:
+            out["quarantine"] = [q.as_dict() for q in self.quarantine]
+        if self.degraded:
+            out["degraded"] = dict(self.degraded)
         return out
 
 
@@ -258,6 +310,10 @@ class MeasurementEngine:
         self.cache: dict[str, Counters] = {} if cache is None else cache
         self.enabled = enabled
         self.max_entries = max_entries
+        # bisecting retry gives up (re-raises) past this many quarantined
+        # experiments: a failure that survives hundreds of isolations is a
+        # broken backend, not poisoned experiments
+        self.max_quarantine = 256
         self.stats = EngineStats()
         self._lock = threading.Lock()
         # lowering-counter baseline: the backend stats dict we snapshotted
@@ -311,7 +367,8 @@ class MeasurementEngine:
                                         self._execute_wave(todo.values(),
                                                            kernel_lock)):
                             resolved[k] = c
-                            self._store(k, c)
+                            if not is_quarantined(c):
+                                self._store(k, c)
                 obs.counter("engine.hit_rate",
                             round(self.stats.hit_rate, 4))
                 return [self._copy(resolved[k]) for k in keys]
@@ -325,6 +382,53 @@ class MeasurementEngine:
 
     # -- Algorithm 2: overhead-cancelling differenced runs, one wave -------
     def _execute_wave(self, experiments, kernel_lock=None) -> list[Counters]:
+        """Execute a miss-wave with bisecting-retry resilience: if the
+        fused wave fails, split it and retry the halves until the
+        failure pins to single experiments, which are quarantined
+        (typed :class:`QuarantinedExperiment` records on ``stats``,
+        :class:`QuarantinedResult` sentinels in the result slots — never
+        cached) instead of aborting the campaign. A clean wave pays
+        nothing: the try/except only costs when a kernel actually
+        raises."""
+        experiments = list(experiments)
+        try:
+            return self._run_experiments(experiments, kernel_lock)
+        except Exception as exc:
+            return self._bisect_wave(experiments, kernel_lock, exc)
+
+    def _bisect_wave(self, experiments, kernel_lock, exc) -> list[Counters]:
+        if len(experiments) == 1:
+            return [self._quarantine(experiments[0], exc)]
+        self.stats.bisect_retries += 1
+        mid = len(experiments) // 2
+        out: list[Counters] = []
+        for half in (experiments[:mid], experiments[mid:]):
+            try:
+                with obs.span("engine.bisect_retry", wave=len(half)):
+                    out.extend(self._run_experiments(half, kernel_lock))
+            except Exception as e2:
+                out.extend(self._bisect_wave(half, kernel_lock, e2))
+        return out
+
+    def _quarantine(self, e: Experiment, exc: BaseException) -> Counters:
+        if self.stats.quarantined >= self.max_quarantine:
+            # a failure that survives this many isolations is systemic
+            # (broken backend, not poisoned experiments): stop eating it
+            raise exc
+        rec = QuarantinedExperiment(
+            uarch=self.machine.name,
+            cache_key=e.cache_key(self.machine.name),
+            code=canonical_code(e.code)[:200],
+            error=f"{type(exc).__name__}: {exc}")
+        self.stats.quarantined += 1
+        self.stats.quarantine.append(rec)
+        obs.instant("engine.quarantine", uarch=rec.uarch, error=rec.error)
+        warnings.warn(f"quarantined experiment on {rec.uarch} "
+                      f"({rec.code[:60]}...): {rec.error}", stacklevel=2)
+        return QuarantinedResult(float("nan"), {})
+
+    def _run_experiments(self, experiments, kernel_lock=None) \
+            -> list[Counters]:
         experiments = list(experiments)
         ls0 = getattr(self.machine, "lowering_stats", None)
         if ls0 and ls0 is not self._lowering_src:
@@ -357,6 +461,10 @@ class MeasurementEngine:
         ds = getattr(self.machine, "device_stats", None)
         if ds is not None:   # device-kernel telemetry snapshot (see stats)
             self.stats.device = ds() or {}
+        dg = getattr(self.machine, "degraded_stats", None)
+        if dg is not None:   # backend-degradation counters snapshot
+            self.stats.degraded = dg() or {}
+            self.stats.degraded_chunks = sum(self.stats.degraded.values())
         out = []
         for i, e in enumerate(experiments):
             c1, c2 = raw[2 * i], raw[2 * i + 1]
@@ -368,7 +476,9 @@ class MeasurementEngine:
 
     @staticmethod
     def _copy(c: Counters) -> Counters:
-        return Counters(c.cycles, dict(c.port_uops))
+        # type(c), not Counters: quarantined sentinels stay identifiable
+        # through the copy callers receive
+        return type(c)(c.cycles, dict(c.port_uops))
 
 
 def as_engine(machine_or_engine) -> MeasurementEngine:
@@ -398,8 +508,15 @@ class CampaignResult:
     phase_seconds: dict = field(default_factory=dict)  # uarch -> phase -> s
     uarch_seconds: dict = field(default_factory=dict)  # uarch -> CPU s
     wave_stats: dict = field(default_factory=dict)     # uarch -> wave widths
+    # uarch -> [QuarantinedExperiment.as_dict()] for experiments isolated
+    # by bisecting retry (only uarches that quarantined anything appear)
+    quarantine: dict = field(default_factory=dict)
     wall_seconds: float = 0.0  # campaign wall; per-uarch values are
     # thread CPU seconds (comparable across runs regardless of sharding)
+
+    @property
+    def quarantined(self) -> int:
+        return sum(len(v) for v in self.quarantine.values())
 
     @property
     def mean_wave_width(self) -> float:
@@ -426,6 +543,9 @@ class CampaignResult:
                 f"{100 * s['hit_rate']:6.1f} {s['executions']:6d}")
         lines.append(f"total wall: {self.wall_seconds:.1f}s, "
                      f"overall hit rate {100 * self.hit_rate:.1f}%")
+        if self.quarantine:
+            lines.append(f"quarantined experiments: {self.quarantined} "
+                         f"({', '.join(sorted(self.quarantine))})")
         return "\n".join(lines)
 
 
@@ -468,15 +588,18 @@ class Campaign:
                     try:
                         with obs.span("campaign.cache_load",
                                       uarch=machine.name):
+                            faults.check("engine.cache_io",
+                                         key=f"load:{path.name}")
                             engine.cache.update(
                                 model_io.load_measurement_cache(
                                     path, expect_fingerprint=
                                     machine_fingerprint(machine)))
-                    except (ValueError, KeyError, OSError) as e:
-                        # a cache is disposable: corruption or a changed
+                    except (ValueError, KeyError, OSError,
+                            InjectedFault) as e:
+                        # a cache is disposable: corruption (incl. a torn
+                        # write from a previous crash) or a changed
                         # machine means cold, not dead (the save below
                         # rewrites it)
-                        import warnings  # noqa: PLC0415
                         warnings.warn(f"ignoring unusable measurement cache "
                                       f"{path}: {e}", stacklevel=2)
             # thread CPU time: under the GIL the machines' threads
@@ -489,9 +612,15 @@ class Campaign:
             sp.set(cpu_s=round(dt, 3),
                    instructions=len(model.instructions))
             if self.cache_dir is not None:
-                with obs.span("campaign.cache_save", uarch=machine.name):
-                    model_io.save_measurement_cache(
-                        self._cache_path(machine.name), engine)
+                try:
+                    with obs.span("campaign.cache_save", uarch=machine.name):
+                        model_io.save_measurement_cache(
+                            self._cache_path(machine.name), engine)
+                except (OSError, InjectedFault) as e:
+                    # losing the persistent cache costs the next run
+                    # warmth, never this run's model
+                    warnings.warn(f"measurement cache save failed for "
+                                  f"{machine.name}: {e}", stacklevel=2)
         return model, engine, dt
 
     def run(self, machines, isa) -> CampaignResult:
@@ -559,6 +688,9 @@ class Campaign:
                     res.phase_seconds[name] = dict(model.phase_seconds)
                     res.wave_stats[name] = dict(model.wave_stats)
                     res.uarch_seconds[name] = dt
+                    if engine.stats.quarantine:
+                        res.quarantine[name] = [
+                            q.as_dict() for q in engine.stats.quarantine]
             except BaseException:
                 # cancel the sibling workers' schedulers at their next wave
                 # boundary, drop queued work, and surface the first failure

@@ -74,6 +74,9 @@ class LatencyResult:
         vals = [e.value for e in self.entries.values()]
         vals += [e.high_value for e in self.entries.values()
                  if e.high_value is not None]
+        # quarantined measurements surface as NaN sentinels: they carry no
+        # latency information, and must not abort the campaign here
+        vals = [v for v in vals if v == v]
         return max(1, round(max(vals))) if vals else 1
 
 

@@ -13,6 +13,7 @@ characterization campaigns incremental across processes.
 from __future__ import annotations
 
 import json
+import os
 import xml.etree.ElementTree as ET
 from pathlib import Path
 from xml.dom import minidom
@@ -187,8 +188,12 @@ def save_measurement_cache(path, engine_or_cache, uarch: str | None = None
     """Serialize an engine's content-addressed result cache to JSON.
 
     The machine's parameter fingerprint is stored alongside, so a cache can
-    never be replayed against an edited uarch definition."""
+    never be replayed against an edited uarch definition.  The write is
+    atomic (tmp + ``os.replace``, the checkpoint/corpus convention): a
+    crash — or an injected ``engine.cache_io`` torn write — leaves either
+    the previous cache or the new one, never a truncated file."""
     from repro.core.engine import machine_fingerprint  # noqa: PLC0415
+    from repro.faults import plan as faults  # noqa: PLC0415
 
     cache = getattr(engine_or_cache, "cache", engine_or_cache)
     machine = getattr(engine_or_cache, "machine", None)
@@ -198,8 +203,15 @@ def save_measurement_cache(path, engine_or_cache, uarch: str | None = None
     entries = {k: [c.cycles, c.port_uops] for k, c in cache.items()}
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
-    path.write_text(json.dumps({"uarch": uarch, "fingerprint": fp,
-                                "entries": entries}))
+    data = json.dumps({"uarch": uarch, "fingerprint": fp,
+                       "entries": entries}).encode()
+    if faults.active():
+        faults.check("engine.cache_io", key=f"save:{path.name}")
+        data = faults.filter_bytes("engine.cache_io", data,
+                                   key=f"save:{path.name}")
+    tmp = path.with_suffix(path.suffix + ".tmp")
+    tmp.write_bytes(data)
+    os.replace(tmp, path)
 
 
 def load_measurement_cache(path, expect_fingerprint: str | None = None

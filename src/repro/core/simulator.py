@@ -130,6 +130,13 @@ class SimMachine:
         per shape bucket — the CI recompile probe reads this)."""
         return self._batch.device_stats() if self._batch else {}
 
+    def degraded_stats(self) -> dict:
+        """Per-transition backend degradation counters (e.g. ``"numpy->
+        scalar"``); surfaced through ``engine_stats`` so campaigns over
+        lazy machines report degradations the same way direct
+        :class:`~repro.core.batch_sim.BatchSimMachine` campaigns do."""
+        return self._batch.degraded_stats() if self._batch else {}
+
     def run_batch(self, codes, kernel_lock=None) -> list:
         """Execute a wave of sequences through the compiled batched
         backend (bit-identical to per-sequence :meth:`run`); falls back

@@ -29,9 +29,12 @@ from __future__ import annotations
 
 import json
 import os
+import warnings
 from pathlib import Path
 
 from repro.core.characterize import characterize
+from repro.faults import plan as faults
+from repro.faults.plan import InjectedFault
 from repro.core.engine import as_engine
 from repro.core.isa import TEST_ISA
 from repro.core.simulator import SimMachine
@@ -62,12 +65,28 @@ def _load_resumed(results_dir: Path, shard: dict):
 
 
 def _write_rows(results_dir: Path, shard: dict, rows: list) -> None:
+    """Atomic per-shard result write.  Failures — including injected
+    ``corpus.shard_write`` faults — degrade to a warning: the rows are
+    already in memory for scoring, so evaluation completes and only warm
+    resume for this shard is lost; a *torn* write (injected or from a
+    kill) is rejected by ``_load_resumed`` on the next run."""
     path = _result_path(results_dir, shard)
-    tmp = path.with_name(path.name + ".tmp")
-    tmp.write_text(json.dumps({"shard": shard["name"],
-                               "sha256": shard["sha256"], "rows": rows},
-                              sort_keys=True, separators=(",", ":")))
-    os.replace(tmp, path)
+    data = json.dumps({"shard": shard["name"],
+                       "sha256": shard["sha256"], "rows": rows},
+                      sort_keys=True, separators=(",", ":")).encode()
+    try:
+        if faults.active():
+            faults.check("corpus.shard_write",
+                         key=f"rows:{shard['name']}")
+            data = faults.filter_bytes("corpus.shard_write", data,
+                                       key=f"rows:{shard['name']}")
+        tmp = path.with_name(path.name + ".tmp")
+        tmp.write_bytes(data)
+        os.replace(tmp, path)
+    except (OSError, InjectedFault) as e:
+        warnings.warn(f"result write failed for shard {shard['name']} "
+                      f"({type(e).__name__}: {e}); rows kept in memory, "
+                      "resume for this shard is cold", stacklevel=2)
 
 
 def _used_variants(shard_blocks) -> list[str]:

@@ -38,6 +38,14 @@ def shard_records(records: list[dict]) -> bytes:
 
 
 def _atomic_write(path: Path, data: bytes) -> None:
+    """tmp + rename; the ``corpus.shard_write`` injection point lives on
+    the tmp-file bytes, so an injected torn write is caught by the
+    manifest hash check (``read_shard``) instead of silently trusted."""
+    from repro.faults import plan as faults  # noqa: PLC0415
+    if faults.active():
+        faults.check("corpus.shard_write", key=path.name)
+        data = faults.filter_bytes("corpus.shard_write", data,
+                                   key=path.name)
     tmp = path.with_name(path.name + ".tmp")
     tmp.write_bytes(data)
     os.replace(tmp, path)

@@ -1,0 +1,18 @@
+"""Deterministic fault injection + fault-tolerance policies.
+
+``repro.faults.plan`` is the seeded injection plane (``REPRO_FAULTS``);
+``repro.faults.tolerance`` holds the straggler/fleet policy objects the
+resilience layers feed. See README §Robustness.
+"""
+from repro.faults.plan import (FaultPlan, FaultRule, FiredFault,
+                               InjectedFault, MODES, POINTS, active, check,
+                               check_wave, filter_bytes, get_plan,
+                               plan_from_env, set_plan)
+from repro.faults.tolerance import FleetMonitor, StepTimer, StragglerDetector
+
+__all__ = [
+    "FaultPlan", "FaultRule", "FiredFault", "InjectedFault", "MODES",
+    "POINTS", "active", "check", "check_wave", "filter_bytes", "get_plan",
+    "plan_from_env", "set_plan",
+    "FleetMonitor", "StepTimer", "StragglerDetector",
+]

@@ -228,6 +228,9 @@ ENGINE_ALIASES: Dict[str, str] = {
     "lowering_hits": "engine.lowering.hits",
     "lowering_misses": "engine.lowering.misses",
     "lowering_evictions": "engine.lowering.evictions",
+    "quarantined": "engine.quarantined",
+    "bisect_retries": "engine.bisect_retries",
+    "degraded_chunks": "engine.degraded_chunks",
     "hit_rate": "engine.cache.hit_rate",
 }
 

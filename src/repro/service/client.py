@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import contextlib
 import json
+import random
 import socket
 import time
 
@@ -45,6 +46,13 @@ class ServiceOverloaded(ServiceError):
     error; ``error["retry_after_ms"]`` suggests a backoff)."""
 
 
+class ServiceDraining(ServiceError):
+    """The server is draining (typed ``Draining`` error): it is finishing
+    in-flight work and refusing new requests.  ``error["retry_after_ms"]``
+    hints how long until the queue empties — retry against another
+    replica, or after the hint if this one will restart."""
+
+
 class ServiceUnavailable(ConnectionError):
     """The server could not be reached (or kept resetting the connection)
     within the client's retry budget, or a read timed out."""
@@ -56,7 +64,8 @@ class ServiceClient:
 
     def __init__(self, host: str, port: int, timeout: float = 30.0, *,
                  connect_timeout: float | None = None, wire: str = "auto",
-                 retries: int = 2, backoff_s: float = 0.05):
+                 retries: int = 2, backoff_s: float = 0.05,
+                 retry_overloaded: int = 0):
         if wire not in ("auto", "binary", "json"):
             raise ValueError(f"unknown wire {wire!r}")
         self.host, self.port = host, port
@@ -65,11 +74,27 @@ class ServiceClient:
                                 else connect_timeout)
         self.retries = max(0, int(retries))
         self.backoff_s = backoff_s
+        # opt-in retry budget for typed Overloaded/Draining responses on
+        # the simple ops; the sleep honors the server's retry_after_ms
+        self.retry_overloaded = max(0, int(retry_overloaded))
+        self._rng = random.Random()
         self._wire_pref = wire
         self.wire: str | None = None  # negotiated: "binary" | "json"
         self._sock = None
         self._rfile = self._wfile = None
         self._connect_with_retry()
+
+    def _backoff_delay(self, attempt: int,
+                       retry_after_ms: float | None = None) -> float:
+        """Full-jitter exponential backoff: delay ~ U[0, backoff_s·2^a],
+        floored at a server-provided ``retry_after_ms`` hint.  The old
+        deterministic ``backoff_s·2^attempt`` schedule made every client
+        that failed together retry together — a synchronized retry storm
+        against a recovering server; the jitter decorrelates them."""
+        delay = self._rng.uniform(0.0, self.backoff_s * (2 ** attempt))
+        if retry_after_ms:
+            delay = max(delay, float(retry_after_ms) / 1e3)
+        return delay
 
     # -- connection management ---------------------------------------------
     def _open_socket(self):
@@ -114,7 +139,7 @@ class ServiceClient:
             except (ConnectionError, OSError) as e:
                 last = e
                 if attempt < self.retries:
-                    time.sleep(self.backoff_s * (2 ** attempt))
+                    time.sleep(self._backoff_delay(attempt))
         raise ServiceUnavailable(
             f"cannot connect to {self.host}:{self.port} after "
             f"{self.retries + 1} attempts: {last}") from last
@@ -155,7 +180,7 @@ class ServiceClient:
                     raise ServiceUnavailable(
                         f"connection to {self.host}:{self.port} kept "
                         f"resetting ({attempt + 1} attempts): {e}") from e
-                time.sleep(self.backoff_s * (2 ** attempt))
+                time.sleep(self._backoff_delay(attempt))
                 attempt += 1
                 self._reconnect(mode)
 
@@ -178,8 +203,26 @@ class ServiceClient:
             err = resp.get("error") or {}
             if err.get("type") == "Overloaded":
                 raise ServiceOverloaded(err)
+            if err.get("type") == "Draining":
+                raise ServiceDraining(err)
             raise ServiceError(err)
         return resp.get("result")
+
+    def _call_retrying(self, msg: dict):
+        """``_call`` + ``_unwrap`` with an opt-in retry budget for typed
+        Overloaded/Draining responses (``retry_overloaded``), sleeping a
+        full-jitter backoff floored at the server's ``retry_after_ms``
+        hint between attempts."""
+        attempt = 0
+        while True:
+            try:
+                return self._unwrap(self._call(msg))
+            except (ServiceOverloaded, ServiceDraining) as e:
+                if attempt >= self.retry_overloaded:
+                    raise
+                time.sleep(self._backoff_delay(
+                    attempt, e.error.get("retry_after_ms")))
+                attempt += 1
 
     @staticmethod
     def _as_packed_block(block):
@@ -195,18 +238,28 @@ class ServiceClient:
 
     # -- endpoints ---------------------------------------------------------
     def ping(self) -> bool:
-        return self._unwrap(self._call({"op": "ping"})) == "pong"
+        return self._call_retrying({"op": "ping"}) == "pong"
 
     def uarches(self) -> list[str]:
-        return self._unwrap(self._call({"op": "uarches"}))
+        return self._call_retrying({"op": "uarches"})
 
     def stats(self) -> dict:
-        return self._unwrap(self._call({"op": "stats"}))
+        return self._call_retrying({"op": "stats"})
 
     def metrics(self) -> dict:
         """Canonical metrics snapshot (``{name: {"type": ..., ...}}``, see
         :mod:`repro.obs.metrics`); ``stats()`` keeps the legacy shape."""
-        return self._unwrap(self._call({"op": "metrics"}))
+        return self._call_retrying({"op": "metrics"})
+
+    def health(self) -> dict:
+        """Server liveness/readiness: drain state, queue depth, worker
+        liveness, model registry status (answered even while draining)."""
+        return self._call_retrying({"op": "health"})
+
+    def drain(self) -> dict:
+        """Ask the server to drain gracefully (finish in-flight work,
+        refuse new work with typed ``Draining`` envelopes)."""
+        return self._unwrap(self._call({"op": "drain"}))
 
     def reload(self, uarch: str | None = None) -> list[str]:
         msg = {"op": "reload"}
@@ -223,9 +276,11 @@ class ServiceClient:
         """Predict one block (textual format or list of Instr). Returns the
         prediction dict; with ``raw=True`` returns the full response
         envelope instead of raising on structured errors."""
-        resp = self._call({"op": "predict", "uarch": uarch,
-                           "block": self._as_wire_block(block)})
-        return resp if raw else self._unwrap(resp)
+        msg = {"op": "predict", "uarch": uarch,
+               "block": self._as_wire_block(block)}
+        if raw:
+            return self._call(msg)
+        return self._call_retrying(msg)
 
     def predict_batch(self, uarch: str, blocks, *,
                       budget_us: float | None = None) -> list[dict]:

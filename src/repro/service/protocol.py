@@ -26,6 +26,7 @@ import struct
 
 from repro.core.predictor import Prediction, UnknownInstructionError
 from repro.core.simulator import Instr
+from repro.faults import plan as _faults  # stdlib-only, keeps the wire dep-free
 
 PROTOCOL_VERSION = 1
 
@@ -138,7 +139,14 @@ def error_to_dict(exc: BaseException) -> dict:
 
 
 def send_msg(wfile, obj) -> None:
-    wfile.write((json.dumps(obj, separators=(",", ":")) + "\n").encode())
+    body = json.dumps(obj, separators=(",", ":")).encode()
+    if _faults.active():
+        # corrupt the body *before* the newline delimiter: framing stays
+        # intact, so the peer reads one garbled line and fails with a
+        # typed decode error instead of desyncing or hanging
+        body = _faults.filter_bytes("wire.frame", body).replace(b"\n", b" ")
+        _faults.check("wire.frame")
+    wfile.write(body + b"\n")
     wfile.flush()
 
 
@@ -203,6 +211,13 @@ def hello_frame(version: int = BINARY_VERSION) -> bytes:
 
 
 def frame(kind: int, payload: bytes) -> bytes:
+    if _faults.active():
+        # corrupt the payload *before* the header is packed: the length
+        # field stays consistent with what is sent, so the peer reads one
+        # whole (garbled) frame and raises a typed decode error instead
+        # of desyncing the stream or blocking on missing bytes
+        payload = _faults.filter_bytes("wire.frame", payload)
+        _faults.check("wire.frame")
     return _HDR.pack(BINARY_MAGIC, kind, len(payload)) + payload
 
 
@@ -352,6 +367,8 @@ def unpack_value(payload):
         v, off = _unpack_value(payload, 0)
     except (IndexError, struct.error) as exc:
         raise BinaryProtocolError(f"truncated payload: {exc}") from None
+    except UnicodeDecodeError as exc:  # corrupted-in-flight string bytes
+        raise BinaryProtocolError(f"malformed payload: {exc}") from None
     if off != len(payload):
         raise BinaryProtocolError(f"{len(payload) - off} trailing bytes "
                                   f"after value")

@@ -47,7 +47,7 @@ import threading
 import time
 import uuid
 from collections import OrderedDict, deque
-from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import Executor, Future
 
 from repro.core.isa import TEST_ISA
 from repro.core.predictor import UnknownInstructionError, missing_specs
@@ -401,6 +401,7 @@ class PredictionService:
         self.coalescer = _Coalescer(self, max_batch, batch_window_s)
         self.started = time.time()
         self._front_door = None  # set by PredictionServer (admission stats)
+        self._draining = threading.Event()
         # access log (newline-JSON, one record per request) and the
         # slow-request WARNING budget; constructor args override the
         # REPRO_ACCESS_LOG / REPRO_SLOW_REQUEST_US env knobs
@@ -707,6 +708,43 @@ class PredictionService:
     def uarches(self) -> list[str]:
         return self.registry.uarches()
 
+    # -- resilience: drain + health ----------------------------------------
+    @property
+    def draining(self) -> bool:
+        return self._draining.is_set()
+
+    def drain(self) -> dict:
+        """Graceful drain: stop accepting new work on both wires (work
+        ops get a typed ``Draining`` envelope), finish everything already
+        in flight, keep answering introspection (ping/stats/metrics/
+        health) so orchestrators can watch the queue empty.  Idempotent;
+        there is deliberately no un-drain — restart the replica."""
+        already = self._draining.is_set()
+        self._draining.set()
+        fd = self._front_door
+        return {"draining": True, "was_draining": already,
+                "inflight": (fd.admission.stats()["inflight"]
+                             if fd is not None else 0)}
+
+    def health(self) -> dict:
+        """Liveness/readiness snapshot: drain state, queue depth and
+        worker liveness (when a front door is attached), and model
+        registry status — cheap enough to answer inline on the event
+        loop, so it stays responsive under saturation."""
+        out = {"status": "draining" if self.draining else "ok",
+               "draining": self.draining,
+               "uptime_s": round(time.time() - self.started, 1),
+               "registry": self.registry.stats()}
+        fd = self._front_door
+        if fd is not None:
+            adm = fd.admission.stats()
+            out["queue_depth"] = adm["queue_depth"]
+            out["inflight"] = adm["inflight"]
+            liveness = getattr(fd._pool, "liveness", None)
+            if liveness is not None:
+                out["workers"] = liveness()
+        return out
+
     def reload(self, uarch: str | None = None) -> list[str]:
         return self.registry.reload(uarch)
 
@@ -800,6 +838,13 @@ class _Handler(socketserver.StreamRequestHandler):
             if msg is None:
                 break
             if isinstance(msg, dict) and msg.get("op") == "predict_corpus":
+                if service.draining:
+                    try:
+                        protocol.send_msg(self.wfile,
+                                          _draining_env(service))
+                    except OSError:
+                        break
+                    continue
                 # streaming op: one response line per shard + summary
                 try:
                     for resp in _corpus_stream(service, msg):
@@ -826,6 +871,12 @@ class _Handler(socketserver.StreamRequestHandler):
     @staticmethod
     def _dispatch(service: PredictionService, msg: dict) -> dict:
         op = msg.get("op")
+        if op == "health":
+            return {"ok": True, "result": service.health()}
+        if op == "drain":
+            return {"ok": True, "result": service.drain()}
+        if service.draining and op not in _INTROSPECT_OPS:
+            return _draining_env(service)
         if op == "ping":
             return {"ok": True, "result": "pong",
                     "version": protocol.PROTOCOL_VERSION}
@@ -892,6 +943,120 @@ class ThreadedPredictionServer:
 # ---------------------------------------------------------------------------
 
 
+class WorkerCrashed(RuntimeError):
+    """A worker thread died (a ``BaseException`` escaped the job) while
+    running this request; the pool respawned a replacement thread and the
+    request's future resolves to this typed error instead of hanging."""
+
+
+class ResilientPool(Executor):
+    """Bounded thread pool with worker-crash recovery.
+
+    The stock ``ThreadPoolExecutor`` work item swallows ``BaseException``
+    into the future and keeps the (possibly wounded) thread; and a thread
+    killed hard enough to die between jobs silently shrinks the pool.
+    This executor makes the failure mode explicit: a job that raises an
+    ``Exception`` resolves its future with that exception as usual, but a
+    ``BaseException`` escaping a job (a) resolves the future with a typed
+    :class:`WorkerCrashed` so no caller blocks forever, (b) replenishes
+    the pool with a fresh thread, and (c) lets the dying thread die.
+    ``liveness()`` feeds the ``health`` op's worker section."""
+
+    def __init__(self, max_workers: int,
+                 thread_name_prefix: str = "worker"):
+        self._max_workers = max(1, int(max_workers))
+        self._prefix = thread_name_prefix
+        self._work: queue.SimpleQueue = queue.SimpleQueue()
+        self._lock = threading.Lock()
+        self._threads: list = []
+        self._crashes = 0
+        self._seq = 0
+        self._down = False
+        for _ in range(self._max_workers):
+            self._spawn()
+
+    def _spawn(self) -> None:
+        with self._lock:
+            if self._down:
+                return
+            self._seq += 1
+            t = threading.Thread(target=self._worker, daemon=True,
+                                 name=f"{self._prefix}-{self._seq}")
+            self._threads.append(t)
+        t.start()
+
+    def _worker(self) -> None:
+        while True:
+            item = self._work.get()
+            if item is None:
+                return
+            fut, fn, args, kwargs = item
+            if not fut.set_running_or_notify_cancel():
+                continue
+            try:
+                fut.set_result(fn(*args, **kwargs))
+            except Exception as e:  # normal job failure: thread survives
+                fut.set_exception(e)
+            except BaseException as e:
+                # the thread is dying: resolve the future with a typed
+                # error, replace the thread, then let this one unwind
+                fut.set_exception(WorkerCrashed(
+                    f"worker thread crashed mid-request: "
+                    f"{type(e).__name__}: {e}"))
+                me = threading.current_thread()
+                with self._lock:
+                    self._crashes += 1
+                    self._threads = [t for t in self._threads if t is not me]
+                    down = self._down
+                if not down:
+                    self._spawn()
+                return
+
+    def submit(self, fn, /, *args, **kwargs) -> Future:
+        if self._down:
+            raise RuntimeError("cannot schedule new futures after shutdown")
+        fut: Future = Future()
+        self._work.put((fut, fn, args, kwargs))
+        return fut
+
+    def liveness(self) -> dict:
+        with self._lock:
+            return {"configured": self._max_workers,
+                    "alive": sum(1 for t in self._threads if t.is_alive()),
+                    "crashed": self._crashes}
+
+    def shutdown(self, wait: bool = True, *,
+                 cancel_futures: bool = False) -> None:
+        with self._lock:
+            self._down = True
+            threads = list(self._threads)
+        for _ in range(len(threads) + self._max_workers):
+            self._work.put(None)
+        if wait:
+            for t in threads:
+                t.join(timeout=5)
+
+
+#: ops still answered while draining (introspection + drain itself)
+_INTROSPECT_OPS = frozenset(("ping", "uarches", "stats", "metrics",
+                             "health", "drain"))
+
+
+def _draining_env(service: "PredictionService") -> dict:
+    """Typed envelope for work refused during graceful drain.  Carries
+    the same ``retry_after_ms`` hint as the ``Overloaded`` envelope so
+    clients back off — or fail over — instead of hammering a replica on
+    its way out."""
+    fd = getattr(service, "_front_door", None)
+    retry_ms = (fd.admission.retry_hint_ms() if fd is not None
+                else 1000.0)
+    return {"ok": False,
+            "error": {"type": "Draining",
+                      "message": "server is draining: finishing in-flight "
+                                 "work, not accepting new requests",
+                      "retry_after_ms": retry_ms}}
+
+
 class AdmissionController:
     """Bounded-queue admission with an EWMA-estimated latency budget.
 
@@ -944,6 +1109,13 @@ class AdmissionController:
     def queue_depth(self) -> int:
         with self._lock:
             return max(0, self._inflight - self.workers)
+
+    def retry_hint_ms(self) -> float:
+        """The ``retry_after_ms`` hint: estimated time for the current
+        queue to clear (shared by Overloaded and Draining envelopes)."""
+        with self._lock:
+            depth = max(0, self._inflight - self.workers)
+            return round(max(1, depth) * self._ewma_s * 1e3, 1)
 
     @property
     def shed(self) -> int:
@@ -1014,8 +1186,8 @@ class PredictionServer:
         self.wire_counts = {"json_conns": 0, "binary_conns": 0,
                             "bad_frames": 0}
         service._front_door = self
-        self._pool = ThreadPoolExecutor(max_workers=workers,
-                                        thread_name_prefix="uops-worker")
+        self._pool = ResilientPool(max_workers=workers,
+                                   thread_name_prefix="uops-worker")
         self._host_arg, self._port_arg = host, port
         self._loop: asyncio.AbstractEventLoop | None = None
         self._startup = threading.Event()
@@ -1056,6 +1228,11 @@ class PredictionServer:
                 loop.run_until_complete(
                     asyncio.gather(*pending, return_exceptions=True))
             loop.close()
+
+    def drain(self) -> dict:
+        """Graceful drain of the attached service: new work is refused
+        with a typed ``Draining`` envelope, in-flight work finishes."""
+        return self.service.drain()
 
     def close(self) -> None:
         loop = self._loop
@@ -1164,6 +1341,8 @@ class PredictionServer:
 
     async def _dispatch_binary(self, kind: int, payload: bytes) -> bytes:
         if kind == protocol.K_PREDICT_BATCH:
+            if self.service.draining:
+                return _bframe(_draining_env(self.service))
             fast = self.service.serve_wave_cached(payload)
             if fast is not None:  # exact-request hit: answer on the loop
                 return protocol.frame(protocol.K_PREDICT_BATCH_RESP, fast)
@@ -1212,6 +1391,10 @@ class PredictionServer:
         arrives as an ``Overloaded`` envelope tagged with its index, the
         stream carries on) and a final ``done`` summary line."""
         service = self.service
+        if service.draining:
+            writer.write(_jline(_draining_env(service)))
+            await writer.drain()
+            return
         try:
             uarch = msg["uarch"]
             shards = [tuple(protocol.wire_to_packed(b) for b in shard)
@@ -1269,6 +1452,12 @@ class PredictionServer:
         predict_batch response codec), K_PREDICT_CORPUS_END summary
         last."""
         service = self.service
+        if service.draining:
+            # client treats a K_RESP error inside a corpus stream as a
+            # request-level typed failure (raises, never hangs)
+            writer.write(_bframe(_draining_env(service)))
+            await writer.drain()
+            return
         try:
             uarch, budget_us, shards = protocol.decode_predict_corpus(
                 payload)
@@ -1330,6 +1519,8 @@ class PredictionServer:
         introspection answers inline on the event loop."""
         op = msg.get("op")
         service = self.service
+        if service.draining and op not in _INTROSPECT_OPS:
+            return enc(_draining_env(service))
         if op == "predict_batch":
             try:
                 uarch = msg["uarch"]
@@ -1348,7 +1539,7 @@ class PredictionServer:
                 return enc({"ok": True, "result": envs})
 
             return await self._admitted(work, msg.get("budget_us"), enc)
-        if op in ("ping", "uarches", "stats", "metrics"):
+        if op in _INTROSPECT_OPS:
             return enc(_Handler._dispatch(service, msg))
 
         def work() -> bytes:

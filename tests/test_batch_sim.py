@@ -729,9 +729,11 @@ def test_device_slot_leased_until_extraction():
 
 
 def test_kernel_failure_releases_slots(monkeypatch):
-    """A transient kernel failure must not leak leased buffer slots: the
-    error path waits out in-flight shard kernels, releases every slot,
-    and the machine recovers on the next wave with correct results."""
+    """A device kernel failure must not leak leased buffer slots: the
+    error path waits out in-flight shard kernels and releases every
+    slot — and the wave then *recovers* by degrading down the backend
+    chain (jax -> numpy), with bit-identical results and the reroute
+    counted in ``degraded_stats()``."""
     pytest.importorskip("jax")
     import repro.core.batch_sim as bs
 
@@ -745,15 +747,19 @@ def test_kernel_failure_releases_slots(monkeypatch):
         raise RuntimeError("transient kernel failure")
 
     monkeypatch.setattr(bs, "_run_kernel", boom)
-    with pytest.raises(RuntimeError, match="transient kernel failure"):
-        m.run_batch(codes)
+    ref = [SimMachine(SIM_SKL, TEST_ISA).run(list(c)) for c in codes]
+    with pytest.warns(UserWarning, match="degraded jax->numpy"):
+        got = m.run_batch(codes)     # degrades to numpy, does not raise
     assert calls
     for ring in m._device._rings.values():
         assert all(not s.leased for s in ring)
-    monkeypatch.setattr(bs, "_run_kernel", real)
-    ref = [SimMachine(SIM_SKL, TEST_ISA).run(list(c)) for c in codes]
-    got = m.run_batch(codes)
+    assert m.degraded_stats().get("jax->numpy", 0) >= 1
     for a, b in zip(ref, got):
+        assert a.cycles == b.cycles and a.port_uops == b.port_uops
+    # with the kernel healthy again the device path serves the next wave
+    monkeypatch.setattr(bs, "_run_kernel", real)
+    got2 = m.run_batch(codes)
+    for a, b in zip(ref, got2):
         assert a.cycles == b.cycles and a.port_uops == b.port_uops
 
 

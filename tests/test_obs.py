@@ -242,8 +242,14 @@ def test_engine_stats_legacy_shape():
     assert list(stats) == ["requests", "cache_hits", "dedup_hits",
                            "executions", "machine_runs", "batches",
                            "evictions", "lowering_hits", "lowering_misses",
-                           "lowering_evictions", "hit_rate", "device"]
+                           "lowering_evictions", "quarantined",
+                           "bisect_retries", "degraded_chunks",
+                           "hit_rate", "device"]
     assert stats["requests"] > 0
+    # resilience counters are zero on a clean run (and as_dict drops the
+    # quarantine/degraded detail maps entirely when empty)
+    assert stats["quarantined"] == 0 and stats["degraded_chunks"] == 0
+    assert "quarantine" not in stats and "degraded" not in stats
     # and the canonical registry carries the same numbers
     reg = metrics.MetricsRegistry()
     metrics.absorb_engine_stats(reg, stats)
